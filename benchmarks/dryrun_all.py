@@ -1,0 +1,100 @@
+"""Sweep the multi-pod dry-run over every (arch x shape x mesh) combination.
+
+Each combo runs in a subprocess (the 512-device XLA flag is per-process, and
+a failure cannot kill the sweep).  Results (or error text) land under
+experiments/dryrun/ as JSON; a summary table prints at the end.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.dryrun_all [--mesh single|multi|both]
+        [--arch A ...] [--shape S ...] [--mixer dense|ppermute]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "phi-3-vision-4.2b",
+    "seamless-m4t-medium",
+    "mamba2-130m",
+    "zamba2-2.7b",
+    "qwen3-moe-235b-a22b",
+    "starcoder2-7b",
+    "qwen2.5-14b",
+    "qwen3-1.7b",
+    "minitron-4b",
+    "grok-1-314b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def run_combo(arch: str, shape: str, multi: bool, mixer: str, out: str,
+              timeout: int = 3000) -> dict:
+    tag = f"{arch}__{shape}__{'multi' if multi else 'single'}__{mixer}"
+    path = os.path.join(out, tag + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", arch, "--shape", shape, "--mixer", mixer, "--out", out,
+    ]
+    if multi:
+        # multi-pod proves the pod axis shards; the roofline table is
+        # single-pod only, so skip the cost calibration compiles here
+        cmd += ["--multi-pod", "--no-calibrate"]
+    t0 = time.time()
+    try:
+        proc = subprocess.run(
+            cmd, capture_output=True, text=True, timeout=timeout,
+            env={**os.environ, "PYTHONPATH": "src"},
+        )
+        ok = proc.returncode == 0
+        err = proc.stderr[-3000:] if not ok else ""
+    except subprocess.TimeoutExpired:
+        ok, err = False, f"timeout after {timeout}s"
+    if not ok:
+        res = {"arch": arch, "shape": shape,
+               "mesh": "multi" if multi else "single",
+               "mixer": mixer, "error": err, "wall_s": time.time() - t0}
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2)
+        return res
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--arch", nargs="*", default=ARCHS)
+    ap.add_argument("--shape", nargs="*", default=SHAPES)
+    ap.add_argument("--mixer", default="dense")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    rows = []
+    for arch in args.arch:
+        for shape in args.shape:
+            for multi in meshes:
+                res = run_combo(arch, shape, multi, args.mixer, args.out)
+                status = "FAIL" if "error" in res else res["roofline"]["dominant"]
+                rows.append((arch, shape, res.get("mesh"), status))
+                print(f"{arch:26s} {shape:12s} {res.get('mesh'):6s} -> {status}",
+                      flush=True)
+    fails = [r for r in rows if r[3] == "FAIL"]
+    print(f"\n{len(rows) - len(fails)}/{len(rows)} combos compiled")
+    if fails:
+        for f_ in fails:
+            print("FAILED:", f_)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Fig. 4: effect of momentum parameter gamma (OPTION I vs II vs none),
+MLP + MCP on heterogeneous data."""
+from __future__ import annotations
+
+from repro.core import DepositumConfig
+
+from benchmarks.common import ExperimentConfig, run_depositum
+
+SETTINGS = [("none", 0.0)] + [(m, g) for m in ("polyak", "nesterov")
+                              for g in (0.2, 0.5, 0.8)]
+
+
+def run(rounds: int = 50):
+    rows = []
+    for momentum, gamma in SETTINGS:
+        cfg = ExperimentConfig(
+            model="mlp", n_clients=10, topology="ring", theta=1.0,
+            n_classes=10, rounds=rounds,
+            depositum=DepositumConfig(alpha=0.05, beta=0.5, gamma=gamma,
+                                      momentum=momentum, comm_period=10,
+                                      prox_name="mcp",
+                                      prox_kwargs={"lam": 1e-4,
+                                                   "theta": 4.0}),
+        )
+        c = run_depositum(cfg)
+        rows.append({"momentum": momentum, "gamma": gamma,
+                     "final_loss": c["loss"][-1],
+                     "final_acc": c["accuracy"][-1],
+                     "wall_s": c["wall_s"], "curves": c})
+    return rows
+
+
+def check(rows) -> dict:
+    none_loss = [r for r in rows if r["momentum"] == "none"][0]["final_loss"]
+    best_mom = min(r["final_loss"] for r in rows if r["momentum"] != "none")
+    return {"momentum_improves": best_mom <= none_loss + 1e-3,
+            "best_momentum_loss": best_mom, "no_momentum_loss": none_loss}
+
+
+if __name__ == "__main__":
+    rows = run()
+    for r in rows:
+        print({k: v for k, v in r.items() if k != "curves"})
+    print(check(rows))

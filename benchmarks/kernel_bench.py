@@ -1,0 +1,77 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU / Mosaic on TPU) vs the
+pure-jnp reference path.  On CPU the numbers characterise the *reference*
+path; the Pallas timings become meaningful on real TPU hardware."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.prox.kernel import fused_update_pallas, prox_pallas
+from repro.kernels.prox.ref import fused_update_ref, prox_l1_ref
+
+
+def _time(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+    on_tpu = jax.default_backend() == "tpu"
+
+    n = 1 << 20  # 1M params
+    x = jax.random.normal(key, (n,)) * 0.01
+    y = jax.random.normal(jax.random.fold_in(key, 1), (n,)) * 0.01
+    nu = jax.random.normal(jax.random.fold_in(key, 2), (n,)) * 0.01
+
+    ref_prox = jax.jit(lambda v: prox_l1_ref(v, 1e-4, 0.1))
+    rows.append(("prox_l1_ref_1M", _time(ref_prox, x), "jnp oracle"))
+    if on_tpu:
+        rows.append(("prox_l1_pallas_1M",
+                     _time(lambda v: prox_pallas(v, kind="l1", lam=1e-4,
+                                                 alpha=0.1), x),
+                     "pallas"))
+
+    ref_fused = jax.jit(lambda a, b, c: fused_update_ref(a, b, c, 1e-4, 0.1,
+                                                         0.8))
+    rows.append(("fused_update_ref_1M", _time(ref_fused, x, y, nu),
+                 "jnp oracle"))
+    # unfused sequence for the fusion-win comparison
+    unfused = jax.jit(lambda a, b, c: (
+        prox_l1_ref(a - 0.1 * (0.8 * c + 0.2 * b), 1e-4, 0.1),
+        0.8 * c + 0.2 * b))
+    rows.append(("unfused_update_1M", _time(unfused, x, y, nu), "jnp oracle"))
+    if on_tpu:
+        rows.append(("fused_update_pallas_1M",
+                     _time(lambda a, b, c: fused_update_pallas(
+                         a, b, c, kind="l1", lam=1e-4, alpha=0.1, gamma=0.8),
+                         x, y, nu), "pallas"))
+
+    B, L, H, KV, D = 1, 1024, 8, 2, 128
+    q = jax.random.normal(key, (B, L, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 3), (B, L, KV, D))
+    v = jax.random.normal(jax.random.fold_in(key, 4), (B, L, KV, D))
+    ref_attn = jax.jit(lambda a, b, c: attention_ref(a, b, c, causal=True))
+    rows.append(("attention_ref_1k", _time(ref_attn, q, k, v, iters=5),
+                 "jnp oracle"))
+    if on_tpu:
+        rows.append(("flash_attention_1k",
+                     _time(lambda a, b, c: flash_attention(a, b, c,
+                                                           causal=True),
+                           q, k, v, iters=5), "pallas"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, src in run():
+        print(f"{name},{us:.1f},{src}")

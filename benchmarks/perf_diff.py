@@ -1,0 +1,45 @@
+"""Diff two dry-run JSONs (baseline vs optimized) for §Perf records.
+
+    PYTHONPATH=src python -m benchmarks.perf_diff base.json variant.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt(v):
+    return f"{v:.4g}" if isinstance(v, float) else str(v)
+
+
+def diff(a_path: str, b_path: str) -> str:
+    a, b = load(a_path), load(b_path)
+    lines = [f"baseline:  {a_path}", f"variant:   {b_path}", ""]
+    ra, rb = a["roofline"], b["roofline"]
+    for key in ("t_compute_s", "t_memory_s", "t_collective_s",
+                "step_lower_bound_s", "useful_flops_ratio"):
+        va, vb = ra.get(key, 0), rb.get(key, 0)
+        ratio = (va / vb) if vb else float("inf")
+        lines.append(f"{key:22s} {fmt(va):>12s} -> {fmt(vb):>12s}"
+                     f"   ({ratio:.2f}x)")
+    lines.append(f"{'dominant':22s} {ra['dominant']:>12s} -> "
+                 f"{rb['dominant']:>12s}")
+    ca = a.get("collectives", {})
+    cb = b.get("collectives", {})
+    for kind in sorted(set(ca) | set(cb)):
+        ba = ca.get(kind, {}).get("bytes", 0) / 2**30
+        bb = cb.get(kind, {}).get("bytes", 0) / 2**30
+        lines.append(f"coll {kind:18s} {ba:10.3f} GB -> {bb:10.3f} GB")
+    ma = a["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30
+    mb = b["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30
+    lines.append(f"{'temp GB/device':22s} {ma:12.1f} -> {mb:12.1f}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(diff(sys.argv[1], sys.argv[2]))

@@ -1,0 +1,106 @@
+"""Aggregate dry-run JSONs into the §Roofline table (markdown + CSV)."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.analysis.roofline import model_flops
+from repro.configs.base import get_config
+
+
+def load_all(dirname: str, mesh: str = "single", mixer: str = "dense"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("mesh") != mesh or d.get("mixer", "dense") != mixer:
+            continue
+        if "error" in d:
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "error": True})
+            continue
+        rl = d["roofline"]
+        chips = d["chips"]
+        mf = model_flops(get_config(d["arch"]), d["shape"])
+        hlo_flops_global = rl["hlo_flops_per_device"] * chips
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "kind": d["kind"],
+            "t_compute": rl["t_compute_s"], "t_memory": rl["t_memory_s"],
+            "t_collective": rl["t_collective_s"],
+            "dominant": rl["dominant"],
+            "bound_s": rl["step_lower_bound_s"],
+            "model_flops": mf,
+            "useful_ratio": mf / hlo_flops_global if hlo_flops_global else 0,
+            "mem_args_gb": d["memory_analysis"].get(
+                "argument_size_in_bytes", 0) / 2**30,
+            "mem_temp_gb": d["memory_analysis"].get(
+                "temp_size_in_bytes", 0) / 2**30,
+            "compile_s": d.get("compile_s", 0),
+        })
+    return rows
+
+
+FIX_HINT = {
+    ("train", "collective"): "replace dense-W gossip all-gather with "
+                             "ppermute neighbor exchange / raise T0",
+    ("train", "memory"): "fewer remat sweeps (checkpoint policy) + fused "
+                         "update kernel to cut optimizer HBM traffic",
+    ("train", "compute"): "near roofline for compute; overlap gossip with "
+                          "local grad step",
+    ("decode", "collective"): "stop re-gathering weights per token: "
+                              "keep TP-sharded matmuls / batch decode steps",
+    ("decode", "memory"): "KV/state streaming is the floor: shrink cache "
+                          "dtype (int8 KV) or widen batch per step",
+    ("prefill", "collective"): "all-reduce of TP activations dominates: "
+                               "2D-shard activations or sequence-parallel "
+                               "norms",
+    ("prefill", "memory"): "attention IO bound: flash-attention kernel "
+                           "(fused softmax, no L^2 materialisation)",
+    ("prefill", "compute"): "near roofline",
+}
+
+
+def to_markdown(rows) -> str:
+    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant "
+           "| useful FLOP ratio | args GB/dev | temp GB/dev | next lever |")
+    sep = "|" + "---|" * 10
+    out = [hdr, sep]
+    for r in rows:
+        if r.get("error"):
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | ERROR "
+                       "| - | - | - | - |")
+            continue
+        hint = FIX_HINT.get((r["kind"], r["dominant"]), "-")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.4g} "
+            f"| {r['t_memory']:.4g} | {r['t_collective']:.4g} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.3f} "
+            f"| {r['mem_args_gb']:.1f} | {r['mem_temp_gb']:.1f} | {hint} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--mixer", default="dense")
+    args = ap.parse_args()
+    rows = load_all(args.dir, args.mesh, args.mixer)
+    print(to_markdown(rows))
+    worst = sorted((r for r in rows if not r.get("error")),
+                   key=lambda r: r["useful_ratio"])[:5]
+    print("\nworst useful-FLOP ratios:",
+          [(r["arch"], r["shape"], round(r["useful_ratio"], 4))
+           for r in worst])
+    coll = sorted((r for r in rows if not r.get("error")),
+                  key=lambda r: -(r["t_collective"] / max(r["bound_s"],
+                                                          1e-12)))[:5]
+    print("most collective-bound:",
+          [(r["arch"], r["shape"]) for r in coll])
+
+
+if __name__ == "__main__":
+    main()

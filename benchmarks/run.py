@@ -1,0 +1,95 @@
+"""Benchmark runner: one experiment per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = mean wall time per
+DEPOSITUM iteration; derived = the experiment's headline check/metric) and
+saves full curves to experiments/paper_validation/.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+
+def _curveless(rows):
+    return [{k: v for k, v in r.items() if k != "curves"
+             and not str(k).startswith("_")} for r in rows]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer rounds (CI mode)")
+    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--out", default="experiments/paper_validation")
+    args, _ = ap.parse_known_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    lines = ["name,us_per_call,derived"]
+    results = {}
+
+    def wanted(name):
+        return args.only is None or name in args.only
+
+    def record(name, rows, check, us):
+        results[name] = {"rows": _curveless(rows), "check": check}
+        with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+            json.dump(results[name], f, indent=2, default=str)
+        ok = all(v for v in check.values() if isinstance(v, bool))
+        lines.append(f"{name},{us:.1f},{'PASS' if ok else 'CHECK'} {check}")
+        print(lines[-1], flush=True)
+
+    if wanted("fig3_stepsizes"):
+        from benchmarks import fig3_stepsizes as m
+        rows = m.run(rounds=20 if args.quick else 60)
+        us = np.mean([r["wall_s"] / r["iters"] for r in rows]) * 1e6
+        record("fig3_stepsizes", rows, m.check(rows), us)
+
+    if wanted("fig4_momentum"):
+        from benchmarks import fig4_momentum as m
+        rows = m.run(rounds=15 if args.quick else 50)
+        us = np.mean([r["curves"]["wall_s"] / r["curves"]["iters"]
+                      for r in rows]) * 1e6
+        record("fig4_momentum", rows, m.check(rows), us)
+
+    if wanted("fig5_period"):
+        from benchmarks import fig5_period as m
+        rows = m.run()
+        us = np.mean([r["curves"]["wall_s"] / r["curves"]["iters"]
+                      for r in rows]) * 1e6
+        record("fig5_period", rows, m.check(rows), us)
+
+    if wanted("fig6_topology"):
+        from benchmarks import fig6_topology as m
+        rows = m.run(rounds=15 if args.quick else 40)
+        us = np.mean([r["curves"]["wall_s"] / r["curves"]["iters"]
+                      for r in rows]) * 1e6
+        record("fig6_topology", rows, m.check(rows), us)
+
+    if wanted("fig7_speedup"):
+        from benchmarks import fig7_speedup as m
+        rows = m.run()
+        us = np.mean([r["curves"]["wall_s"] / r["curves"]["iters"]
+                      for r in rows]) * 1e6
+        record("fig7_speedup", rows, m.check(rows), us)
+
+    if wanted("table3_algorithms"):
+        from benchmarks import table3_algorithms as m
+        rows = m.run()
+        record("table3_algorithms", rows, m.check(rows), 0.0)
+
+    if wanted("kernel_bench"):
+        from benchmarks import kernel_bench as m
+        for name, us, src in m.run():
+            lines.append(f"kernel/{name},{us:.1f},{src}")
+            print(lines[-1], flush=True)
+
+    with open(os.path.join(args.out, "summary.csv"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"\nwrote {args.out}/summary.csv")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Table III: DEPOSITUM (OPTION I/II) vs FedMiD / FedDR / FedADMM.
+
+MLP on synthetic classification with SCAD regulariser, under IID / Dir(1) /
+Dir(0.1) partitions; mean +/- std of test accuracy over 3 seeds.
+DEPOSITUM runs on a complete graph, baselines emulate the star/server setup
+(their aggregation is a client mean), mirroring the paper's setting.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DepositumConfig,
+    init as dep_init,
+    local_then_comm_round,
+    make_dense_mixer,
+    mixing_matrix,
+)
+from repro.core.fedopt import FedAlgConfig, make_algorithm
+from repro.data import make_classification
+
+from benchmarks.common import MODELS, ce_loss
+
+PARTITIONS = {"IID": np.inf, "Dir(1)": 1.0, "Dir(0.1)": 0.1}
+ALGS = ["depositum-I", "depositum-II", "fedmid", "feddr", "fedadmm"]
+N_CLIENTS = 10
+ROUNDS = 30
+T0 = 5
+SEEDS = (0, 1, 2)
+PROX = ("scad", {"lam": 1e-4, "theta": 4.0})
+
+
+def _test_accuracy(apply_fn, params, ds):
+    # held-out evaluation: last 25% of samples (paper uses test split)
+    cut = int(len(ds.y) * 0.75)
+    logits = apply_fn(params, jnp.asarray(ds.x[cut:]))
+    return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(ds.y[cut:])))
+
+
+def run_one(alg: str, theta: float, seed: int) -> float:
+    ds = make_classification(n_samples=4096, n_features=64, n_classes=10,
+                             n_clients=N_CLIENTS, theta=theta, seed=seed)
+    init_fn, apply_fn = MODELS["mlp"]
+    key = jax.random.PRNGKey(seed)
+    params0 = init_fn(key, 64, 10)
+    loss_one = functools.partial(ce_loss, apply_fn)
+    grad_one = jax.grad(loss_one)
+
+    def grad_fn(xst, batch):
+        return jax.vmap(grad_one)(xst, batch), {}
+
+    rng = np.random.default_rng(seed + 13)
+
+    def sample_round():
+        bx, by = ds.stacked_batches(rng, 32, T0)
+        return {"x": jnp.asarray(bx), "y": jnp.asarray(by)}
+
+    prox_name, prox_kwargs = PROX
+    if alg.startswith("depositum"):
+        momentum = "polyak" if alg.endswith("-I") else "nesterov"
+        dep = DepositumConfig(alpha=0.1, beta=1.0, gamma=0.5,
+                              momentum=momentum, comm_period=T0,
+                              prox_name=prox_name, prox_kwargs=prox_kwargs)
+        W = mixing_matrix("complete", N_CLIENTS)
+        state = dep_init(params0, N_CLIENTS)
+        rnd = jax.jit(functools.partial(local_then_comm_round,
+                                        grad_fn=grad_fn, config=dep,
+                                        mixer=make_dense_mixer(W)))
+        for _ in range(ROUNDS):
+            state, _ = rnd(state, batches=sample_round())
+        pbar = jax.tree_util.tree_map(lambda v: jnp.mean(v, 0), state.x)
+    else:
+        cfg = FedAlgConfig(alpha=0.1, local_steps=T0, prox_name=prox_name,
+                           prox_kwargs=prox_kwargs, eta=0.5,
+                           W=mixing_matrix("complete", N_CLIENTS))
+        a = make_algorithm(alg, cfg)
+        st = a.init(params0, N_CLIENTS)
+        for _ in range(ROUNDS):
+            st, _ = a.round(st, sample_round(), grad_fn)
+        pbar = jax.tree_util.tree_map(lambda v: jnp.mean(v, 0), st.x)
+    return _test_accuracy(apply_fn, pbar, ds)
+
+
+def run():
+    rows = []
+    for part_name, theta in PARTITIONS.items():
+        accs = {alg: [run_one(alg, theta, s) for s in SEEDS] for alg in ALGS}
+        row = {"partition": part_name}
+        for alg in ALGS:
+            row[alg] = f"{np.mean(accs[alg]):.4f}±{np.std(accs[alg]):.4f}"
+            row[f"_{alg}_mean"] = float(np.mean(accs[alg]))
+        rows.append(row)
+    return rows
+
+
+def check(rows) -> dict:
+    """Paper claim: DEPOSITUM best-in-row (we assert >= max(baselines)-eps)."""
+    ok = True
+    for row in rows:
+        dep = max(row["_depositum-I_mean"], row["_depositum-II_mean"])
+        base = max(row[f"_{a}_mean"] for a in ("fedmid", "feddr", "fedadmm"))
+        ok = ok and (dep >= base - 0.02)
+    return {"depositum_best_or_tied": ok}
+
+
+if __name__ == "__main__":
+    rows = run()
+    for r in rows:
+        print({k: v for k, v in r.items() if not k.startswith("_")})
+    print(check(rows))

@@ -1,0 +1,81 @@
+"""End-to-end driver: federated pre-training of a ~100M-class LM for a few
+hundred steps with DEPOSITUM, then serving from the consensus model.
+
+Uses the mamba2-130m reduced config by default (CPU-trainable); pass
+--arch/--rounds to scale up.  Each of the 8 clients sees a *different* token
+distribution (Dirichlet-style unigram skew), the exact heterogeneity the
+paper's gradient tracking is built to correct.
+
+    PYTHONPATH=src python examples/federated_llm_pretrain.py --rounds 50
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import DepositumConfig
+from repro.data import make_federated_lm_streams
+from repro.models import build_model
+from repro.serving import BatchedServer, ServeConfig
+from repro.training import save_checkpoint
+from repro.training.train_loop import (
+    FederatedTrainer,
+    TrainerConfig,
+    lm_batch_iterator,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (fleet-scale) config")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=75)
+    ap.add_argument("--t0", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=not args.full)
+    model = build_model(cfg)
+    print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
+          f"family={cfg.family}")
+
+    tc = TrainerConfig(
+        n_clients=args.clients, topology="ring", log_every=10,
+        depositum=DepositumConfig(alpha=0.02, beta=1.0, gamma=0.8,
+                                  momentum="polyak", comm_period=args.t0,
+                                  prox_name="l1",
+                                  prox_kwargs={"lam": 1e-6}),
+    )
+    trainer = FederatedTrainer(model, tc)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    stream = make_federated_lm_streams(cfg.vocab_size, args.clients)
+    it = lm_batch_iterator(stream, tc, batch=args.batch, seq_len=args.seq)
+
+    t0 = time.time()
+    state, hist = trainer.run(state, it, args.rounds)
+    iters = args.rounds * args.t0
+    print(f"{iters} iterations ({args.rounds} comm rounds) in "
+          f"{time.time()-t0:.0f}s")
+    for rec in hist:
+        print(f"  round {rec['round']:4d}  loss {rec.get('loss', float('nan')):.3f}")
+
+    params = trainer.mean_params(state)
+    save_checkpoint("/tmp/depositum_lm.npz", params, step=iters)
+
+    srv = BatchedServer(model, params, ServeConfig(max_new_tokens=12,
+                                                   temperature=0.8,
+                                                   cache_capacity=128))
+    prompts = jnp.ones((4, 8), jnp.int32)
+    out = srv.generate(prompts)
+    print("sampled continuations (token ids):")
+    for row in out:
+        print("  ", row.tolist())
+
+
+if __name__ == "__main__":
+    main()

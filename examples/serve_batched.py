@@ -1,0 +1,55 @@
+"""Batched serving example: generate from any zoo architecture with the
+prefill + KV-cache decode path (the serve_step lowered by the dry-run).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch qwen3-1.7b
+    PYTHONPATH=src python examples/serve_batched.py --arch zamba2-2.7b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import BatchedServer, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params, _ = model.init(key)
+
+    srv = BatchedServer(model, params, ServeConfig(
+        max_new_tokens=args.max_new, temperature=0.7, cache_capacity=256))
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size, jnp.int32)
+    extra = None
+    if cfg.family == "vlm":
+        extra = {"vision_embeds": jax.random.normal(
+            key, (args.batch, cfg.n_vision_tokens, cfg.d_model),
+            cfg.jnp_dtype)}
+    if cfg.family == "encdec":
+        extra = {"memory": jax.random.normal(
+            key, (args.batch, 64, cfg.d_model), cfg.jnp_dtype)}
+
+    # warm-up compile, then measure steady-state decode
+    srv.generate(prompts, extra=extra)
+    t0 = time.time()
+    out = srv.generate(prompts, extra=extra)
+    dt = time.time() - t0
+    print(f"{args.arch}: {args.batch}x{args.max_new} tokens in {dt:.2f}s "
+          f"({args.batch*args.max_new/dt:.1f} tok/s steady-state, CPU)")
+    print("first sequence:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Parse collective traffic out of compiled HLO text.
+
+``compiled.cost_analysis()`` has FLOPs and HBM bytes but no collective bytes,
+so we regex the (post-SPMD-partitioning) HLO: every ``all-gather`` /
+``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` / ``collective-permute``
+op's *operand* sizes are summed, attributed per category.
+
+Shapes in post-partitioning HLO are per-device, so the sum is
+bytes-sent-per-device per step (the right numerator for an ICI roofline).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g.  bf16[16,4096,128]{2,1,0}  or  f32[]  or tuples thereof
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# one HLO instruction:  %name = <shape> kind(<operands>), ...
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?[%\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict[str, dict[str, float]]:
+    """-> {kind: {"count": c, "bytes": b}} from post-partitioning HLO text.
+
+    Bytes are the *result* shapes of the collective ops ('-done' results for
+    async pairs are skipped to avoid double counting; '-start' carries the
+    full tuple, of which we take the result component conservatively).
+    """
+    out: dict[str, dict[str, float]] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # async pair; counted at -start
+        shape_text, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_text)
+        if "-start" in line:
+            # tuple (operand, result[, scratch]) — halve to approximate result
+            b = b // 2
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+    return dict(out)
+
+
+def collective_bytes(hlo_text: str) -> int:
+    return int(sum(v["bytes"] for v in parse_collectives(hlo_text).values()))

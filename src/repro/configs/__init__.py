@@ -1,0 +1,7 @@
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    ModelConfig,
+    get_config,
+    list_archs,
+    register,
+)

@@ -1,0 +1,187 @@
+"""Architecture configuration system.
+
+One ``ModelConfig`` describes any member of the zoo (dense / moe / ssm /
+hybrid / encdec / vlm).  Every assigned architecture file in this package
+instantiates the exact published config (citation in ``source``) plus a
+``reduced()`` variant for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+INPUT_SHAPES = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    source: str                      # citation
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    # --- attention options -------------------------------------------------
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    sliding_window: int = 0          # 0 = full attention (training/prefill)
+    long_context_window: int = 8192  # SW used for the long_500k decode mode
+    mlp_type: str = "swiglu"         # swiglu | gelu
+    tie_embeddings: bool = False
+    # --- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # --- SSM (mamba2 / SSD) --------------------------------------------------
+    ssm_state: int = 0               # N
+    ssm_head_dim: int = 64           # P
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+    # --- hybrid (zamba2) -----------------------------------------------------
+    shared_attn_every: int = 0       # insert the shared attn block every k layers
+    # --- encoder-decoder -----------------------------------------------------
+    n_encoder_layers: int = 0
+    # --- vlm -----------------------------------------------------------------
+    n_vision_tokens: int = 0         # patch embeddings prepended (stub frontend)
+    # --- numerics ------------------------------------------------------------
+    dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "full"   # full | dots (save matmul outputs)
+    scan_unroll: bool = False    # full-unroll layer scans (cost calibration)
+    max_decode_cache: int = 0        # 0 -> shape-derived
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def ssm_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (total; experts counted fully)."""
+        d, ff, V = self.d_model, self.d_ff, self.vocab_size
+        hd, H, KV = self.hd, self.n_heads, self.n_kv_heads
+        attn = d * (H * hd) + 2 * d * (KV * hd) + (H * hd) * d
+        if self.mlp_type == "swiglu":
+            mlp = 3 * d * ff
+        else:
+            mlp = 2 * d * ff
+        per_layer = 0
+        if self.family in ("dense", "vlm", "moe"):
+            per_layer = attn + (mlp if self.family != "moe" else 0)
+            if self.family == "moe":
+                per_layer += self.n_experts * 3 * d * ff + d * self.n_experts
+            total = self.n_layers * per_layer
+        elif self.family == "ssm":
+            total = self.n_layers * self._ssm_layer_params()
+        elif self.family == "hybrid":
+            n_shared = (
+                self.n_layers // self.shared_attn_every
+                if self.shared_attn_every
+                else 0
+            )
+            total = self.n_layers * self._ssm_layer_params() + (attn + mlp)
+            _ = n_shared  # shared block params counted once
+        elif self.family == "encdec":
+            enc = self.n_encoder_layers * (attn + mlp)
+            dec = self.n_layers * (2 * attn + mlp)  # self + cross attention
+            total = enc + dec
+        else:
+            raise ValueError(self.family)
+        total += V * d  # embedding (+ tied unembed)
+        if not self.tie_embeddings:
+            total += V * d
+        return total
+
+    def _ssm_layer_params(self) -> int:
+        d, di, N = self.d_model, self.ssm_inner, self.ssm_state
+        H = self.ssm_heads
+        in_proj = d * (2 * di + 2 * N + H)   # z, x, B, C, dt
+        conv = (di + 2 * N) * self.ssm_conv_width
+        out = di * d
+        return in_proj + conv + out + 2 * H  # + A_log, D
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top-k experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        inactive = self.n_layers * (self.n_experts - self.experts_per_token) * 3 * d * ff
+        return self.param_count() - inactive
+
+
+_REGISTRY: dict[str, "ArchEntry"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchEntry:
+    full: ModelConfig
+    reduced: ModelConfig
+
+
+def register(full: ModelConfig, reduced: ModelConfig) -> ArchEntry:
+    entry = ArchEntry(full=full, reduced=reduced)
+    _REGISTRY[full.name] = entry
+    return entry
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    e = _REGISTRY[name]
+    return e.reduced if reduced else e.full
+
+
+def list_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    # import every arch module for its register() side effect
+    from repro.configs import (  # noqa: F401
+        phi_3_vision_4_2b,
+        seamless_m4t_medium,
+        mamba2_130m,
+        zamba2_2_7b,
+        qwen3_moe_235b_a22b,
+        starcoder2_7b,
+        qwen2_5_14b,
+        qwen3_1_7b,
+        minitron_4b,
+        grok_1_314b,
+    )

@@ -1,0 +1,25 @@
+"""Paper core: DEPOSITUM and its composite-optimization substrate."""
+from repro.core.depositum import (  # noqa: F401
+    DepositumConfig,
+    DepositumState,
+    init,
+    step,
+    local_then_comm_round,
+    stationarity_metrics,
+    consensus_error,
+)
+from repro.core.prox import ProxOperator, get_prox, prox_gradient  # noqa: F401
+from repro.core.topology import (  # noqa: F401
+    mixing_matrix,
+    spectral_lambda,
+    validate_mixing,
+    delta_coefficients,
+)
+from repro.core.gossip import (  # noqa: F401
+    make_dense_mixer,
+    make_complete_mixer,
+    make_neighbor_mixer,
+    ring_mixer,
+    torus_mixer,
+    identity_mixer,
+)

@@ -1,0 +1,6 @@
+from repro.core.fedopt.baselines import (  # noqa: F401
+    FedAlgConfig,
+    FedState,
+    make_algorithm,
+    ALGORITHMS,
+)

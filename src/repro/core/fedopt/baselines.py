@@ -1,0 +1,190 @@
+"""Federated composite-optimization baselines used by the paper's Table III.
+
+All algorithms share one round-based interface so the Table III benchmark can
+swap them freely:
+
+    alg = make_algorithm("fedmid", ...)
+    state = alg.init(params, n_clients)
+    state, aux = alg.round(state, batches, grad_fn)   # batches: T0 leading dim
+
+* **FedMiD** [Yuan, Zaheer, Reddi ICML'21] — federated mirror (here: proximal)
+  descent: T0 local prox-SGD steps, then server primal averaging.  Exhibits
+  the "curse of primal averaging" the paper cites.
+* **FedDR** [Tran Dinh et al. NeurIPS'21] — randomized Douglas-Rachford
+  splitting: clients keep y_i, run an inexact prox_f step (T0 SGD steps),
+  reflect, the server prox_h's the average.
+* **FedADMM** [Wang, Marella, Anderson CDC'22] — primal-dual consensus ADMM:
+  clients carry duals lambda_i, solve the augmented local problem inexactly,
+  server applies prox_h to the dual-corrected average.
+* **DSGD / ProxDSGD** [Lian et al.'17; Zeng & Yin'18] — decentralized
+  (prox-)SGD over a mixing matrix, no tracking, no momentum.
+* **ProxDSGT** — DEPOSITUM ablation: gamma=0, beta=1 (pure proximal gradient
+  tracking, cf. ProxGT-SA [Xin et al.'21] with single-exchange mixing).
+
+These run at paper scale (stacked client dim, dense mixers); DEPOSITUM itself
+is the production path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gossip import Mixer, make_dense_mixer
+from repro.core.prox import ProxOperator, get_prox
+
+PyTree = Any
+GradFn = Callable[[PyTree, Any], tuple[PyTree, Any]]
+tm = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAlgConfig:
+    name: str = "fedmid"
+    alpha: float = 0.05            # local step size
+    local_steps: int = 10          # T0-equivalent
+    prox_name: str = "l1"
+    prox_kwargs: dict = dataclasses.field(default_factory=lambda: {"lam": 1e-4})
+    eta: float = 0.5               # FedDR relaxation / ADMM rho
+    W: Any = None                  # mixing matrix for decentralized algs
+
+    def make_prox(self) -> ProxOperator:
+        return get_prox(self.prox_name, **self.prox_kwargs)
+
+
+class FedState(NamedTuple):
+    x: PyTree          # per-client iterates (leading dim n)
+    aux1: PyTree       # alg-specific (FedDR: y_i; FedADMM: lambda_i)
+    aux2: PyTree       # alg-specific (server variable z, broadcast)
+    t: jnp.ndarray
+
+
+def _broadcast(params, n):
+    return tm(lambda p: jnp.broadcast_to(p[None], (n,) + p.shape), params)
+
+
+def _zeros(tree):
+    return tm(jnp.zeros_like, tree)
+
+
+def _client_mean(tree):
+    return tm(lambda v: jnp.mean(v, axis=0), tree)
+
+
+def _rebroadcast(tree, n):
+    return tm(lambda v: jnp.broadcast_to(v[None], (n,) + v.shape), tree)
+
+
+class _Algorithm:
+    def __init__(self, cfg: FedAlgConfig):
+        self.cfg = cfg
+        self.prox = cfg.make_prox()
+
+    def init(self, params: PyTree, n_clients: int) -> FedState:
+        x = _broadcast(params, n_clients)
+        return FedState(x=x, aux1=_zeros(x), aux2=x, t=jnp.zeros((), jnp.int32))
+
+    def _local_sgd(self, x, batches, grad_fn, use_prox: bool, anchor=None, rho=0.0):
+        """T0 (prox-)SGD steps; optional proximal-point anchor (FedDR/ADMM)."""
+        a = self.cfg.alpha
+
+        def body(carry, batch):
+            g, _ = grad_fn(carry, batch)
+            if rho:
+                g = tm(lambda gg, c, z: gg + rho * (c - z), g, carry, anchor)
+            nxt = tm(lambda c, gg: c - a * gg, carry, g)
+            if use_prox:
+                nxt = self.prox.prox(nxt, a)
+            return nxt, None
+
+        x, _ = jax.lax.scan(body, x, batches)
+        return x
+
+    def round(self, state, batches, grad_fn):  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class FedMiD(_Algorithm):
+    def round(self, state, batches, grad_fn):
+        n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
+        x = self._local_sgd(state.x, batches, grad_fn, use_prox=True)
+        xbar = _client_mean(x)                     # primal averaging
+        x = _rebroadcast(xbar, n)
+        return state._replace(x=x, t=state.t + 1), {}
+
+
+class FedDR(_Algorithm):
+    def init(self, params, n_clients):
+        st = super().init(params, n_clients)
+        return st._replace(aux1=st.x)  # y_i = x_i
+
+    def round(self, state, batches, grad_fn):
+        n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
+        eta = self.cfg.eta
+        xbar = state.aux2
+        # y_i <- y_i + eta (xbar - x_i)
+        y = tm(lambda yy, zb, xi: yy + eta * (zb - xi), state.aux1, xbar, state.x)
+        # x_i ~= argmin f_i(x) + 1/(2 eta)||x - y_i||^2  (inexact: SGD w/ anchor)
+        x = self._local_sgd(
+            y, batches, grad_fn, use_prox=False, anchor=y, rho=1.0 / eta
+        )
+        xhat = tm(lambda xi, yy: 2.0 * xi - yy, x, y)
+        zbar = self.prox.prox(_client_mean(xhat), eta)
+        return (
+            state._replace(x=x, aux1=y, aux2=_rebroadcast(zbar, n), t=state.t + 1),
+            {},
+        )
+
+
+class FedADMM(_Algorithm):
+    def round(self, state, batches, grad_fn):
+        n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
+        rho = self.cfg.eta
+        lam, z = state.aux1, state.aux2
+        # local: min f_i(x) + <lam_i, x - z> + rho/2 ||x - z||^2 (inexact)
+        shifted_anchor = tm(lambda zz, ll: zz - ll / rho, z, lam)
+        x = self._local_sgd(
+            state.x, batches, grad_fn, use_prox=False, anchor=shifted_anchor, rho=rho
+        )
+        lam = tm(lambda ll, xi, zz: ll + rho * (xi - zz), lam, x, z)
+        zbar = self.prox.prox(
+            _client_mean(tm(lambda xi, ll: xi + ll / rho, x, lam)), 1.0 / rho
+        )
+        return (
+            state._replace(x=x, aux1=lam, aux2=_rebroadcast(zbar, n), t=state.t + 1),
+            {},
+        )
+
+
+class DSGD(_Algorithm):
+    """Decentralized (prox-)SGD: x <- W prox(x - alpha g); T0 local steps."""
+
+    use_prox = True
+
+    def __init__(self, cfg):
+        super().__init__(cfg)
+        if cfg.W is None:
+            raise ValueError("DSGD needs a mixing matrix W")
+        self.mixer: Mixer = make_dense_mixer(cfg.W)
+
+    def round(self, state, batches, grad_fn):
+        x = self._local_sgd(state.x, batches, grad_fn, use_prox=self.use_prox)
+        x = self.mixer(x)
+        return state._replace(x=x, t=state.t + 1), {}
+
+
+def make_algorithm(name: str, cfg: FedAlgConfig) -> _Algorithm:
+    cls = ALGORITHMS.get(name)
+    if cls is None:
+        raise KeyError(f"unknown algorithm {name!r}; have {sorted(ALGORITHMS)}")
+    return cls(dataclasses.replace(cfg, name=name))
+
+
+ALGORITHMS: dict[str, type[_Algorithm]] = {
+    "fedmid": FedMiD,
+    "feddr": FedDR,
+    "fedadmm": FedADMM,
+    "dsgd": DSGD,
+}

@@ -1,0 +1,41 @@
+"""Stochastic momentum updates (paper Sec. II-C / Algorithm 1 OPTION I & II).
+
+In DEPOSITUM the momentum is driven by the *tracking* variable y (not the raw
+stochastic gradient): OPTION I (Polyak / SHB)
+
+    nu^{t+1} = gamma nu^t + (1-gamma) y^t
+
+OPTION II (Nesterov / SNAG)
+
+    mu^{t+1} = gamma mu^t + (1-gamma) y^t
+    nu^{t+1} = gamma mu^{t+1} + (1-gamma) y^t
+
+gamma = 0 reduces both to vanilla (nu^{t+1} = y^t).
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+
+MomentumKind = Literal["polyak", "nesterov", "none"]
+
+
+def momentum_update(kind: MomentumKind, gamma: float, nu, mu, y):
+    """Return (nu_next, mu_next) for pytrees nu, mu, y."""
+    tm = jax.tree_util.tree_map
+    if kind == "none" or gamma == 0.0:
+        return y, mu
+    if kind == "polyak":
+        nu_next = tm(lambda v, yy: gamma * v + (1.0 - gamma) * yy, nu, y)
+        return nu_next, mu
+    if kind == "nesterov":
+        mu_next = tm(lambda m, yy: gamma * m + (1.0 - gamma) * yy, mu, y)
+        nu_next = tm(lambda m, yy: gamma * m + (1.0 - gamma) * yy, mu_next, y)
+        return nu_next, mu_next
+    raise ValueError(f"unknown momentum kind {kind!r}")
+
+
+def omega(gamma: float) -> float:
+    """Nesterov consensus-error inflation factor (paper: omega = (1+3g)/(1-g))."""
+    return (1.0 + 3.0 * gamma) / (1.0 - gamma)

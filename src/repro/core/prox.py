@@ -1,0 +1,215 @@
+"""Proximal operators for the composite term h in phi = f + h.
+
+The paper (Assumption 1.iii) requires h proper, closed, rho-weakly convex with
+an easy proximal mapping ``prox_h^{tau}(x) = argmin_z h(z) + tau/2 ||z-x||^2``
+for ``tau > rho >= 0``.  Note the paper's convention: the prox *superscript* is
+the quadratic coefficient ``tau = 1/alpha`` where ``alpha`` is the step size,
+i.e. the update is ``prox_h^{alpha^{-1}}{x - alpha * nu}`` which equals the
+textbook ``prox_{alpha h}(x - alpha nu)``.
+
+Every regulariser is a :class:`ProxOperator` with
+  value(x)          -> scalar h(x) summed over the pytree/array
+  prox(x, alpha)    -> elementwise prox of ``alpha * h`` at x
+  weak_convexity    -> rho  (0 for convex h)
+
+All maps are elementwise (separable), matching the paper's examples
+(l1, MCP, SCAD, indicator).  ``alpha`` is the *step size* (so the quadratic
+coefficient is 1/alpha); validity requires ``alpha * rho < 1``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ProxOperator:
+    """A separable regulariser h with its proximal map."""
+
+    name: str
+    value_fn: Callable[[jnp.ndarray], jnp.ndarray]
+    prox_fn: Callable[[jnp.ndarray, float], jnp.ndarray]
+    weak_convexity: float = 0.0  # rho in the paper
+
+    def value(self, x) -> jnp.ndarray:
+        leaves = jax.tree_util.tree_leaves(x)
+        return sum(jnp.sum(self.value_fn(leaf)) for leaf in leaves)
+
+    def prox(self, x, alpha: float):
+        """prox_{alpha h}(x), applied leafwise over a pytree."""
+        return jax.tree_util.tree_map(lambda leaf: self.prox_fn(leaf, alpha), x)
+
+    def check_step(self, alpha: float) -> None:
+        if self.weak_convexity > 0.0 and not alpha * self.weak_convexity < 1.0:
+            raise ValueError(
+                f"prox of {self.weak_convexity}-weakly convex {self.name} needs "
+                f"alpha*rho < 1, got alpha={alpha}"
+            )
+
+
+# ---------------------------------------------------------------------------
+# Convex regularisers
+# ---------------------------------------------------------------------------
+
+def soft_threshold(x, thr):
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - thr, 0.0)
+
+
+def make_l1(lam: float) -> ProxOperator:
+    """h(x) = lam * ||x||_1 ; prox = soft thresholding."""
+    return ProxOperator(
+        name=f"l1({lam})",
+        value_fn=lambda x: lam * jnp.abs(x),
+        prox_fn=lambda x, alpha: soft_threshold(x, alpha * lam),
+        weak_convexity=0.0,
+    )
+
+
+def make_l2_squared(lam: float) -> ProxOperator:
+    """h(x) = lam/2 * ||x||^2 ; prox = shrinkage x / (1 + alpha lam)."""
+    return ProxOperator(
+        name=f"l2sq({lam})",
+        value_fn=lambda x: 0.5 * lam * jnp.square(x),
+        prox_fn=lambda x, alpha: x / (1.0 + alpha * lam),
+        weak_convexity=0.0,
+    )
+
+
+def make_box_indicator(radius: float) -> ProxOperator:
+    """h = indicator of the box [-radius, radius]^d ; prox = projection."""
+
+    def value_fn(x):
+        # 0 inside, +inf outside; for metrics report 0 (feasible iterates).
+        return jnp.zeros_like(x)
+
+    return ProxOperator(
+        name=f"box({radius})",
+        value_fn=value_fn,
+        prox_fn=lambda x, alpha: jnp.clip(x, -radius, radius),
+        weak_convexity=0.0,
+    )
+
+
+def make_group_l2(lam: float) -> ProxOperator:
+    """Row-group lasso: h(X) = lam * sum_rows ||X_row||_2 (block soft thr)."""
+
+    def value_fn(x):
+        if x.ndim < 2:
+            return lam * jnp.abs(x)
+        norms = jnp.linalg.norm(x.reshape(x.shape[0], -1), axis=-1)
+        return lam * norms
+
+    def prox_fn(x, alpha):
+        if x.ndim < 2:
+            return soft_threshold(x, alpha * lam)
+        flat = x.reshape(x.shape[0], -1)
+        norms = jnp.linalg.norm(flat, axis=-1, keepdims=True)
+        scale = jnp.maximum(1.0 - alpha * lam / jnp.maximum(norms, 1e-12), 0.0)
+        return (flat * scale).reshape(x.shape)
+
+    return ProxOperator(f"group_l2({lam})", value_fn, prox_fn, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Weakly convex regularisers (MCP, SCAD) — paper's nonconvex examples
+# ---------------------------------------------------------------------------
+
+def make_mcp(lam: float, theta: float) -> ProxOperator:
+    """Minimax Concave Penalty.
+
+    h(t) = lam|t| - t^2/(2 theta)          for |t| <= theta lam
+         = theta lam^2 / 2                 for |t| >  theta lam
+    rho-weakly convex with rho = 1/theta.  Prox (for alpha/theta < 1):
+        |x| <= alpha lam            -> 0
+        alpha lam < |x| <= theta lam-> (x - alpha lam sign(x)) / (1 - alpha/theta)
+        |x| > theta lam             -> x
+    (standard firm-thresholding; requires theta > alpha).
+    """
+    if theta <= 0:
+        raise ValueError("MCP needs theta > 0")
+
+    def value_fn(x):
+        a = jnp.abs(x)
+        inner = lam * a - jnp.square(x) / (2.0 * theta)
+        outer = 0.5 * theta * lam * lam
+        return jnp.where(a <= theta * lam, inner, outer)
+
+    def prox_fn(x, alpha):
+        a = jnp.abs(x)
+        shrunk = soft_threshold(x, alpha * lam) / (1.0 - alpha / theta)
+        out = jnp.where(a <= theta * lam, shrunk, x)
+        return jnp.where(a <= alpha * lam, jnp.zeros_like(x), out)
+
+    return ProxOperator(f"mcp({lam},{theta})", value_fn, prox_fn, 1.0 / theta)
+
+
+def make_scad(lam: float, theta: float) -> ProxOperator:
+    """Smoothly Clipped Absolute Deviation (theta > 2).
+
+    h(t) = lam|t|                                        |t| <= lam
+         = (2 theta lam |t| - t^2 - lam^2)/(2(theta-1))  lam < |t| <= theta lam
+         = lam^2 (theta+1)/2                             |t| > theta lam
+    rho = 1/(theta-1) weakly convex.  Prox (alpha rho < 1):
+        |x| <= (1+alpha) lam      -> soft(x, alpha lam)
+        (1+alpha) lam < |x| <= theta lam
+                                  -> ((theta-1) x - sign(x) theta lam alpha)
+                                     / (theta - 1 - alpha)
+        |x| > theta lam           -> x
+    """
+    if theta <= 2:
+        raise ValueError("SCAD needs theta > 2")
+
+    def value_fn(x):
+        a = jnp.abs(x)
+        r1 = lam * a
+        r2 = (2.0 * theta * lam * a - jnp.square(x) - lam * lam) / (2.0 * (theta - 1.0))
+        r3 = jnp.full_like(x, lam * lam * (theta + 1.0) / 2.0)
+        return jnp.where(a <= lam, r1, jnp.where(a <= theta * lam, r2, r3))
+
+    def prox_fn(x, alpha):
+        a = jnp.abs(x)
+        r1 = soft_threshold(x, alpha * lam)
+        r2 = ((theta - 1.0) * x - jnp.sign(x) * theta * lam * alpha) / (
+            theta - 1.0 - alpha
+        )
+        out = jnp.where(a <= (1.0 + alpha) * lam, r1, jnp.where(a <= theta * lam, r2, x))
+        return out
+
+    return ProxOperator(f"scad({lam},{theta})", value_fn, prox_fn, 1.0 / (theta - 1.0))
+
+
+def make_zero() -> ProxOperator:
+    """h = 0 (smooth problem); prox is the identity."""
+    return ProxOperator("zero", lambda x: jnp.zeros_like(x), lambda x, alpha: x, 0.0)
+
+
+REGISTRY: dict[str, Callable[..., ProxOperator]] = {
+    "l1": make_l1,
+    "l2sq": make_l2_squared,
+    "box": make_box_indicator,
+    "group_l2": make_group_l2,
+    "mcp": make_mcp,
+    "scad": make_scad,
+    "zero": lambda: make_zero(),
+}
+
+
+def get_prox(name: str, **kwargs) -> ProxOperator:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown regulariser {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name](**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Proximal gradient mapping (paper Definition 2)
+# ---------------------------------------------------------------------------
+
+def prox_gradient(prox: ProxOperator, x, grad, alpha: float):
+    """G^alpha(x, nu) = (x - prox_{alpha h}(x - alpha nu)) / alpha  (pytree)."""
+    shifted = jax.tree_util.tree_map(lambda p, g: p - alpha * g, x, grad)
+    proxed = prox.prox(shifted, alpha)
+    return jax.tree_util.tree_map(lambda p, q: (p - q) / alpha, x, proxed)

@@ -1,0 +1,7 @@
+from repro.data.dirichlet import dirichlet_partition  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticClassification,
+    SyntheticTokenStream,
+    make_classification,
+    make_federated_lm_streams,
+)

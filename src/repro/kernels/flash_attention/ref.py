@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for flash attention (causal + sliding window, GQA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, Lq, H, D); k, v: (B, Lk, KV, D); H % KV == 0.
+
+    window > 0 restricts lookback to [i - window + 1, i] (causal SW).
+    """
+    B, Lq, H, D = q.shape
+    Lk, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    qg = q.reshape(B, Lq, KV, group, D)
+    scores = jnp.einsum("bikgd,bjkd->bkgij", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(D).astype(jnp.float32)
+    i = jnp.arange(Lq)[:, None]
+    j = jnp.arange(Lk)[None, :]
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask = mask & (j <= i)
+        if window > 0:
+            mask = mask & (j > i - window)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgij,bjkd->bikgd", probs, v)
+    return out.reshape(B, Lq, H, D)

@@ -1,0 +1,131 @@
+"""Pallas TPU kernels: proximal operators + fused DEPOSITUM local update.
+
+Elementwise, bandwidth-bound: tiles are (8*k, 128)-aligned VMEM blocks
+streamed from HBM.  On TPU the fused kernel turns ~7 HBM sweeps of the
+unfused update (momentum axpy, shift, prox select chain) into 1 read of
+{x, y, nu} + 1 write of {x', nu'}.
+
+Validated on CPU with ``interpret=True`` against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# (sublane, lane)-aligned tile; 8x128 is the fp32 VREG tile, use a multiple
+BLOCK_ROWS = 256
+BLOCK_COLS = 256
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to_2d(x, rows: int, cols: int):
+    """Flatten to 1-D, pad to a multiple of rows*cols, reshape (n_tiles*rows, cols)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    tile = rows * cols
+    padded = ((n + tile - 1) // tile) * tile
+    flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(-1, cols), n
+
+
+# ---------------------------------------------------------------------------
+# prox kernels (l1 / mcp / scad), elementwise on a 2-D tile
+# ---------------------------------------------------------------------------
+
+def _soft(x, thr):
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - thr, 0.0)
+
+
+def _prox_block(x, kind: str, lam: float, theta: float, alpha: float):
+    if kind == "l1":
+        return _soft(x, alpha * lam)
+    if kind == "mcp":
+        a = jnp.abs(x)
+        shrunk = _soft(x, alpha * lam) / (1.0 - alpha / theta)
+        out = jnp.where(a <= theta * lam, shrunk, x)
+        return jnp.where(a <= alpha * lam, jnp.zeros_like(x), out)
+    if kind == "scad":
+        a = jnp.abs(x)
+        r1 = _soft(x, alpha * lam)
+        r2 = ((theta - 1.0) * x - jnp.sign(x) * theta * lam * alpha) / (
+            theta - 1.0 - alpha
+        )
+        return jnp.where(a <= (1.0 + alpha) * lam, r1,
+                         jnp.where(a <= theta * lam, r2, x))
+    raise ValueError(kind)
+
+
+def _prox_kernel(x_ref, o_ref, *, kind, lam, theta, alpha):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = _prox_block(x, kind, lam, theta, alpha).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "lam", "theta", "alpha"))
+def prox_pallas(x, *, kind: str = "l1", lam: float = 1e-4,
+                theta: float = 4.0, alpha: float = 0.1):
+    """prox_{alpha*h}(x) for separable h; any shape/dtype; tiled VMEM pass."""
+    x2, n = _pad_to_2d(x, BLOCK_ROWS, BLOCK_COLS)
+    rows = x2.shape[0]
+    grid = (rows // BLOCK_ROWS,)
+    out = pl.pallas_call(
+        functools.partial(_prox_kernel, kind=kind, lam=lam, theta=theta,
+                          alpha=alpha),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=_should_interpret(),
+    )(x2)
+    return out.reshape(-1)[:n].reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# fused DEPOSITUM local update (Polyak): nu' = g*nu + (1-g)*y ;
+# x' = prox_{alpha h}(x - alpha nu')
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(x_ref, y_ref, nu_ref, xo_ref, nuo_ref, *,
+                  kind, lam, theta, alpha, gamma):
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    nu = nu_ref[...].astype(jnp.float32)
+    nu_next = gamma * nu + (1.0 - gamma) * y
+    shifted = x - alpha * nu_next
+    xo_ref[...] = _prox_block(shifted, kind, lam, theta, alpha).astype(xo_ref.dtype)
+    nuo_ref[...] = nu_next.astype(nuo_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "lam", "theta", "alpha", "gamma")
+)
+def fused_update_pallas(x, y, nu, *, kind: str = "l1", lam: float = 1e-4,
+                        theta: float = 4.0, alpha: float = 0.1,
+                        gamma: float = 0.8):
+    """Fused momentum+prox (one VMEM pass).  Returns (x', nu')."""
+    assert x.shape == y.shape == nu.shape
+    x2, n = _pad_to_2d(x, BLOCK_ROWS, BLOCK_COLS)
+    y2, _ = _pad_to_2d(y, BLOCK_ROWS, BLOCK_COLS)
+    nu2, _ = _pad_to_2d(nu, BLOCK_ROWS, BLOCK_COLS)
+    rows = x2.shape[0]
+    grid = (rows // BLOCK_ROWS,)
+    bs = pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0))
+    xo, nuo = pl.pallas_call(
+        functools.partial(_fused_kernel, kind=kind, lam=lam, theta=theta,
+                          alpha=alpha, gamma=gamma),
+        grid=grid,
+        in_specs=[bs, bs, bs],
+        out_specs=[bs, bs],
+        out_shape=[
+            jax.ShapeDtypeStruct(x2.shape, x.dtype),
+            jax.ShapeDtypeStruct(x2.shape, nu.dtype),
+        ],
+        interpret=_should_interpret(),
+    )(x2, y2, nu2)
+    unpad = lambda o, ref: o.reshape(-1)[:n].reshape(ref.shape)
+    return unpad(xo, x), unpad(nuo, nu)

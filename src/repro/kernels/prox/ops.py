@@ -1,0 +1,31 @@
+"""Jit'd public wrappers for the prox kernels (pytree-aware)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.prox.kernel import fused_update_pallas, prox_pallas
+
+
+def prox_tree(tree, *, kind: str, lam: float, alpha: float, theta: float = 4.0):
+    """Apply the Pallas prox leafwise over a parameter pytree."""
+    return jax.tree_util.tree_map(
+        lambda leaf: prox_pallas(leaf, kind=kind, lam=lam, theta=theta,
+                                 alpha=alpha),
+        tree,
+    )
+
+
+def fused_update_tree(x_tree, y_tree, nu_tree, *, kind: str, lam: float,
+                      alpha: float, gamma: float, theta: float = 4.0):
+    """Fused DEPOSITUM local update over pytrees.  Returns (x', nu')."""
+    flat_x, treedef = jax.tree_util.tree_flatten(x_tree)
+    flat_y = treedef.flatten_up_to(y_tree)
+    flat_nu = treedef.flatten_up_to(nu_tree)
+    outs = [
+        fused_update_pallas(x, y, nu, kind=kind, lam=lam, theta=theta,
+                            alpha=alpha, gamma=gamma)
+        for x, y, nu in zip(flat_x, flat_y, flat_nu)
+    ]
+    xs = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    nus = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return xs, nus

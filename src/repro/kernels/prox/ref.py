@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the fused proximal operators (kernel ground truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def soft_threshold(x, thr):
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - thr, 0.0)
+
+
+def prox_l1_ref(x, lam: float, alpha: float):
+    return soft_threshold(x, alpha * lam)
+
+
+def prox_mcp_ref(x, lam: float, theta: float, alpha: float):
+    a = jnp.abs(x)
+    shrunk = soft_threshold(x, alpha * lam) / (1.0 - alpha / theta)
+    out = jnp.where(a <= theta * lam, shrunk, x)
+    return jnp.where(a <= alpha * lam, jnp.zeros_like(x), out)
+
+
+def prox_scad_ref(x, lam: float, theta: float, alpha: float):
+    a = jnp.abs(x)
+    r1 = soft_threshold(x, alpha * lam)
+    r2 = ((theta - 1.0) * x - jnp.sign(x) * theta * lam * alpha) / (
+        theta - 1.0 - alpha
+    )
+    return jnp.where(a <= (1.0 + alpha) * lam, r1,
+                     jnp.where(a <= theta * lam, r2, x))
+
+
+def fused_update_ref(x, y, nu, lam: float, alpha: float, gamma: float,
+                     prox_kind: str = "l1", theta: float = 4.0):
+    """DEPOSITUM local update fused: Polyak momentum + prox descent.
+
+        nu' = gamma * nu + (1 - gamma) * y
+        x'  = prox_{alpha h}(x - alpha * nu')
+
+    Returns (x', nu').  One pass over 3 model-sized inputs / 2 outputs,
+    vs ~7 HBM sweeps unfused.
+    """
+    nu_next = gamma * nu + (1.0 - gamma) * y
+    shifted = x - alpha * nu_next
+    if prox_kind == "l1":
+        x_next = prox_l1_ref(shifted, lam, alpha)
+    elif prox_kind == "mcp":
+        x_next = prox_mcp_ref(shifted, lam, theta, alpha)
+    elif prox_kind == "scad":
+        x_next = prox_scad_ref(shifted, lam, theta, alpha)
+    else:
+        raise ValueError(prox_kind)
+    return x_next, nu_next

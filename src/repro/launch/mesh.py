@@ -1,0 +1,32 @@
+"""Production mesh builders.
+
+Functions, not module constants, so importing this module never touches jax
+device state.  The dry-run sets ``xla_force_host_platform_device_count=512``
+before any jax import; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod mesh: (data=16, model=16) per pod; 2 pods multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU)."""
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"mesh {data}x{model} > {n} devices")
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware model used by the roofline (per chip)
+HW = {
+    "peak_flops_bf16": 197e12,   # FLOP/s
+    "hbm_bandwidth": 819e9,      # B/s
+    "ici_bandwidth": 50e9,       # B/s per link (conservative single-link)
+}

@@ -1,0 +1,66 @@
+"""Serving launcher: batched generation with any zoo architecture.
+
+Example (CPU, reduced config):
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --reduced \
+        --batch 4 --prompt-len 16 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import BatchedServer, ServeConfig
+from repro.training import restore_checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--cache", type=int, default=256)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params, _ = model.init(key)
+    if args.ckpt:
+        params, _ = restore_checkpoint(args.ckpt, params)
+
+    srv = BatchedServer(model, params, ServeConfig(
+        max_new_tokens=args.max_new, temperature=args.temperature,
+        cache_capacity=args.cache, seed=args.seed,
+    ))
+    prompts = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size, jnp.int32
+    )
+    extra = None
+    if cfg.family == "vlm":
+        extra = {"vision_embeds": jax.random.normal(
+            key, (args.batch, cfg.n_vision_tokens, cfg.d_model), cfg.jnp_dtype)}
+    if cfg.family == "encdec":
+        extra = {"memory": jax.random.normal(
+            key, (args.batch, 32, cfg.d_model), cfg.jnp_dtype)}
+
+    t0 = time.time()
+    out = srv.generate(prompts, extra=extra)
+    dt = time.time() - t0
+    toks = args.batch * args.max_new
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s incl. compile)")
+    print("sample:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,189 @@
+"""ShapeDtypeStruct input specs for every (architecture x input-shape) combo,
+plus logical-axes pytrees for batches and decode caches.
+
+Nothing here allocates device memory: specs feed ``jax.jit(...).lower()``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+from repro.launch.sharding import Placement
+from repro.models import attention as attn_mod
+from repro.models import encdec as encdec_mod
+from repro.models import hybrid as hybrid_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as transformer_mod
+from repro.models.registry import Model
+
+S = jax.ShapeDtypeStruct
+
+DEC_TOKENS_TRAIN = 512          # enc-dec decoder length during training
+VLM_TRAIN_TEXT_FRACTION = True  # vision tokens count toward the seq budget
+
+
+def eval_shapes(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+# ---------------------------------------------------------------------------
+# Train batches: leaves (n_clients, per_client_batch, ...)
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, shape_name: str, n_clients: int):
+    seq, global_batch, kind = INPUT_SHAPES[shape_name]
+    assert kind == "train", shape_name
+    B = max(global_batch // max(n_clients, 1), 1)
+    n = max(n_clients, 1)
+    i32 = jnp.int32
+    d = cfg.d_model
+    if cfg.family == "vlm":
+        L_text = seq - cfg.n_vision_tokens
+        specs = {
+            "tokens": S((n, B, L_text), i32),
+            "labels": S((n, B, L_text), i32),
+            "vision_embeds": S((n, B, cfg.n_vision_tokens, d), cfg.jnp_dtype),
+        }
+        axes = {
+            "tokens": ("clients", "batch", "seq"),
+            "labels": ("clients", "batch", "seq"),
+            "vision_embeds": ("clients", "batch", "seq", "embed"),
+        }
+    elif cfg.family == "encdec":
+        specs = {
+            "frames": S((n, B, seq, d), cfg.jnp_dtype),
+            "tokens": S((n, B, DEC_TOKENS_TRAIN), i32),
+            "labels": S((n, B, DEC_TOKENS_TRAIN), i32),
+        }
+        axes = {
+            "frames": ("clients", "batch", "seq", "embed"),
+            "tokens": ("clients", "batch", "seq"),
+            "labels": ("clients", "batch", "seq"),
+        }
+    else:
+        specs = {
+            "tokens": S((n, B, seq), i32),
+            "labels": S((n, B, seq), i32),
+        }
+        axes = {
+            "tokens": ("clients", "batch", "seq"),
+            "labels": ("clients", "batch", "seq"),
+        }
+    return specs, axes
+
+
+# ---------------------------------------------------------------------------
+# Serving specs (no client dim)
+# ---------------------------------------------------------------------------
+
+def prefill_specs(cfg: ModelConfig, shape_name: str):
+    seq, batch, kind = INPUT_SHAPES[shape_name]
+    assert kind == "prefill", shape_name
+    i32 = jnp.int32
+    d = cfg.d_model
+    if cfg.family == "vlm":
+        specs = {
+            "tokens": S((batch, seq - cfg.n_vision_tokens), i32),
+            "vision_embeds": S((batch, cfg.n_vision_tokens, d), cfg.jnp_dtype),
+        }
+        axes = {
+            "tokens": ("dbatch", "seq"),
+            "vision_embeds": ("dbatch", "seq", "embed"),
+        }
+    elif cfg.family == "encdec":
+        specs = {
+            "frames": S((batch, seq, d), cfg.jnp_dtype),
+            "tokens": S((batch, DEC_TOKENS_TRAIN), i32),
+        }
+        axes = {
+            "frames": ("dbatch", "seq", "embed"),
+            "tokens": ("dbatch", "seq"),
+        }
+    else:
+        specs = {"tokens": S((batch, seq), i32)}
+        axes = {"tokens": ("dbatch", "seq")}
+    return specs, axes
+
+
+def decode_capacity(cfg: ModelConfig, shape_name: str) -> int:
+    seq, _, kind = INPUT_SHAPES[shape_name]
+    assert kind == "decode", shape_name
+    if shape_name == "long_500k":
+        # sub-quadratic mode: sliding-window ring buffer (or SSD state)
+        return cfg.long_context_window or 8192
+    if cfg.sliding_window:
+        return min(seq, cfg.sliding_window)
+    return seq
+
+
+def decode_cache_specs(cfg: ModelConfig, shape_name: str):
+    """(ShapeDtypeStruct cache pytree, axes pytree) for serve_step."""
+    seq, batch, kind = INPUT_SHAPES[shape_name]
+    assert kind == "decode", shape_name
+    cap = decode_capacity(cfg, shape_name)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        shapes = eval_shapes(
+            lambda: transformer_mod.init_decode_cache(cfg, batch, cap)
+        )
+        axes = attn_mod.KVCache(
+            k=("layers", "dbatch", "cache", "kv", "hd"),
+            v=("layers", "dbatch", "cache", "kv", "hd"),
+            pos=("layers",),
+        )
+        return shapes, axes
+    if fam == "ssm":
+        shapes = eval_shapes(lambda: ssm_mod.init_decode_cache(cfg, batch))
+        from repro.models.mamba2 import MambaCache
+
+        axes = MambaCache(
+            conv=("layers", "dbatch", None, "ssm_inner"),
+            ssd=("layers", "dbatch", None, "ssm_state", None),
+        )
+        return shapes, axes
+    if fam == "hybrid":
+        shapes = eval_shapes(
+            lambda: hybrid_mod.init_decode_cache(cfg, batch, cap)
+        )
+        from repro.models.mamba2 import MambaCache
+
+        axes = hybrid_mod.HybridCache(
+            mamba=MambaCache(
+                conv=("groups", None, "dbatch", None, "ssm_inner"),
+                ssd=("groups", None, "dbatch", None, "ssm_state", None),
+            ),
+            kv=attn_mod.KVCache(
+                k=("groups", "dbatch", "cache", "kv", "hd"),
+                v=("groups", "dbatch", "cache", "kv", "hd"),
+                pos=("groups",),
+            ),
+        )
+        return shapes, axes
+    if fam == "encdec":
+        # memory = encoder output over the full context length
+        shapes = eval_shapes(
+            lambda: encdec_mod.init_decode_cache(cfg, batch, 4096, seq)
+        )
+        axes = encdec_mod.EncDecCache(
+            kv=attn_mod.KVCache(
+                k=("layers", "dbatch", "cache", "kv", "hd"),
+                v=("layers", "dbatch", "cache", "kv", "hd"),
+                pos=("layers",),
+            ),
+            memory=("dbatch", "memseq", "embed"),
+        )
+        return shapes, axes
+    raise ValueError(fam)
+
+
+def decode_token_specs(cfg: ModelConfig, shape_name: str):
+    _, batch, kind = INPUT_SHAPES[shape_name]
+    assert kind == "decode"
+    return (
+        {"tokens": S((batch, 1), jnp.int32)},
+        {"tokens": ("dbatch", None)},
+    )

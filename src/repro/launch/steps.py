@@ -1,0 +1,129 @@
+"""Step builders shared by the real launchers and the dry-run.
+
+* ``build_train_step``  — one full DEPOSITUM iteration (momentum + prox +
+  gossip + fresh grads + tracking) for all clients: the communication-round
+  step, i.e. the worst case for collectives.
+* ``build_local_step``  — the collective-free local iteration (t not in T).
+* ``build_serve_step``  — one-token decode against the sharded cache.
+* ``build_prefill_step`` — full-context forward materialising the cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import DepositumConfig, make_dense_mixer, identity_mixer
+from repro.core.depositum import step as depositum_step
+from repro.core.topology import mixing_matrix
+from repro.models.registry import Model
+
+
+def make_grad_fn(model: Model, microbatch: int = 1):
+    """Per-client gradients; optional gradient-accumulation microbatching.
+
+    With ``microbatch = M > 1`` the per-client batch B is processed as M
+    sequential slabs of B/M under ``lax.scan``, averaging gradients — exact
+    (full-batch mean) but with activation temp memory cut ~M-fold.  This is
+    the capacity lever for the giant-MoE training shapes (EXPERIMENTS §Perf
+    #3b).
+    """
+    grad_one = jax.grad(lambda p, b: model.loss(p, b), has_aux=True)
+
+    if microbatch <= 1:
+        def grad_fn(x_stacked, batch):
+            g, aux = jax.vmap(grad_one)(x_stacked, batch)
+            return g, aux
+
+        return grad_fn
+
+    def grad_client(params, batch):
+        def slab(b):
+            return jax.tree_util.tree_map(
+                lambda v: v.reshape((microbatch, v.shape[0] // microbatch)
+                                    + v.shape[1:]), b)
+
+        def body(acc, mb):
+            g, aux = grad_one(params, mb)
+            acc = jax.tree_util.tree_map(lambda a, gg: a + gg, acc, g)
+            return acc, aux
+
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+        gsum, auxs = jax.lax.scan(body, zeros, slab(batch))
+        g = jax.tree_util.tree_map(lambda v: v / microbatch, gsum)
+        aux = jax.tree_util.tree_map(lambda v: v[-1], auxs)
+        return g, aux
+
+    def grad_fn(x_stacked, batch):
+        return jax.vmap(grad_client)(x_stacked, batch)
+
+    return grad_fn
+
+
+def build_train_step(
+    model: Model,
+    dep_cfg: DepositumConfig,
+    n_clients: int,
+    topology: str = "ring",
+    mixer=None,
+    microbatch: int = 1,
+):
+    """(state, batch) -> (state, aux); batch leaves (n, B, ...)."""
+    if mixer is None:
+        W = mixing_matrix(topology, n_clients)
+        mixer = make_dense_mixer(W)
+    grad_fn = make_grad_fn(model, microbatch=microbatch)
+
+    def train_step(state, batch):
+        return depositum_step(
+            state, batch, grad_fn, dep_cfg, mixer, is_comm_step=True
+        )
+
+    return train_step
+
+
+def build_local_step(model: Model, dep_cfg: DepositumConfig):
+    grad_fn = make_grad_fn(model)
+
+    def local_step(state, batch):
+        return depositum_step(
+            state, batch, grad_fn, dep_cfg, identity_mixer, is_comm_step=False
+        )
+
+    return local_step
+
+
+def build_serve_step(model: Model):
+    def serve_step(params, cache, batch):
+        logits, new_cache = model.forward_decode(params, batch, cache)
+        return logits, new_cache
+
+    return serve_step
+
+
+def build_prefill_step(model: Model, capacity: int):
+    cfg = model.cfg
+    if cfg.family == "encdec":
+        from repro.models import encdec as encdec_mod
+
+        def prefill_step(params, batch):
+            memory = encdec_mod.encode(
+                params, batch["frames"], cfg,
+                window=cfg.long_context_window,
+            )
+            # decoder consumes its prompt against the fresh memory
+            logits, _ = encdec_mod.forward_train(
+                params, {"tokens": batch["tokens"]}, cfg, memory=memory
+            )
+            return logits[:, -1:, :], memory
+
+        return prefill_step
+
+    def prefill_step(params, batch):
+        logits, cache = model.forward_prefill(params, batch, capacity)
+        return logits, cache
+
+    return prefill_step

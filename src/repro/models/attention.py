@@ -1,0 +1,213 @@
+"""Grouped-query attention with RoPE, optional qk-norm / QKV bias / sliding
+window, plus the decode path against a (possibly ring-buffered) KV cache.
+
+The jnp path below is the portable reference; on TPU the training/prefill
+soft(max(QK^T))V is swappable for the Pallas flash kernel
+(repro/kernels/flash_attention.py) via ``use_flash``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Initializer, apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+def init_attention(ini: Initializer, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.hd
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    p = {
+        "wq": ini.normal((d, H * hd), ("embed", "qkv")),
+        "wk": ini.normal((d, KV * hd), ("embed", "qkv")),
+        "wv": ini.normal((d, KV * hd), ("embed", "qkv")),
+        "wo": ini.normal((H * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ini.zeros((H * hd,), ("qkv",))
+        p["bk"] = ini.zeros((KV * hd,), ("qkv",))
+        p["bv"] = ini.zeros((KV * hd,), ("qkv",))
+    if cfg.qk_norm:
+        p["q_norm"] = ini.zeros((hd,), (None,))
+        p["k_norm"] = ini.zeros((hd,), (None,))
+    return p
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions):
+    B, L, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bld,dh->blh", x, params["wq"])
+    k = jnp.einsum("bld,dh->blh", x, params["wk"])
+    v = jnp.einsum("bld,dh->blh", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, L, H, hd)
+    k = k.reshape(B, L, KV, hd)
+    v = v.reshape(B, L, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q: (B,L,H,hd) k/v: (B,S,KV,hd); GQA via head grouping."""
+    B, L, H, hd = q.shape
+    KV = k.shape[2]
+    group = H // KV
+    qg = q.reshape(B, L, KV, group, hd)
+    scores = jnp.einsum("blkgh,bskh->bklgs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, :, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bklgs,bskh->blkgh", probs, v)
+    return out.reshape(B, L, H, hd)
+
+
+def causal_mask(L: int, window: int = 0, dtype=bool):
+    """(L, L) True = attend.  window>0 limits lookback (sliding window)."""
+    i = jnp.arange(L)[:, None]
+    j = jnp.arange(L)[None, :]
+    m = j <= i
+    if window > 0:
+        m = m & (j > i - window)
+    return m
+
+
+def attention_train(params, x, cfg: ModelConfig, *, window: int = 0, use_flash=False):
+    """Full-sequence causal attention. x: (B, L, d)."""
+    B, L, _ = x.shape
+    positions = jnp.arange(L)[None, :]
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    w = window or cfg.sliding_window
+    if use_flash:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(q, k, v, causal=True, window=w)
+    else:
+        mask = causal_mask(L, w)[None]
+        out = _sdpa(q, k, v, mask, cfg)
+    out = out.reshape(B, L, cfg.n_heads * cfg.hd)
+    return jnp.einsum("blh,hd->bld", out, params["wo"])
+
+
+def attention_bidir(params, x, cfg: ModelConfig, *, window: int = 0):
+    """Bidirectional (encoder) attention; optional symmetric window."""
+    B, L, _ = x.shape
+    positions = jnp.arange(L)[None, :]
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    mask = None
+    if window > 0:
+        i = jnp.arange(L)[:, None]
+        j = jnp.arange(L)[None, :]
+        mask = (jnp.abs(i - j) < window)[None]
+    out = _sdpa(q, k, v, mask, cfg)
+    out = out.reshape(B, L, cfg.n_heads * cfg.hd)
+    return jnp.einsum("blh,hd->bld", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+def init_cross_attention(ini: Initializer, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.hd
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    return {
+        "wq": ini.normal((d, H * hd), ("embed", "qkv")),
+        "wk": ini.normal((d, KV * hd), ("embed", "qkv")),
+        "wv": ini.normal((d, KV * hd), ("embed", "qkv")),
+        "wo": ini.normal((H * hd, d), ("heads", "embed")),
+    }
+
+
+def cross_attention(params, x, memory, cfg: ModelConfig):
+    """x: (B, L, d) queries; memory: (B, S, d) encoder output (no RoPE)."""
+    B, L, _ = x.shape
+    S = memory.shape[1]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bld,dh->blh", x, params["wq"]).reshape(B, L, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", memory, params["wk"]).reshape(B, S, KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", memory, params["wv"]).reshape(B, S, KV, hd)
+    out = _sdpa(q, k, v, None, cfg)
+    out = out.reshape(B, L, H * hd)
+    return jnp.einsum("blh,hd->bld", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Decode path with KV cache (optionally a sliding-window ring buffer)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray       # (B, C, KV, hd)  C = cache capacity
+    v: jnp.ndarray       # (B, C, KV, hd)
+    pos: jnp.ndarray     # () int32 — absolute position of next token
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int, dtype) -> KVCache:
+    shape = (batch, capacity, cfg.n_kv_heads, cfg.hd)
+    return KVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def attention_decode(params, x, cache: KVCache, cfg: ModelConfig):
+    """One-token decode.  x: (B, 1, d).  Ring-buffer write at pos % C.
+
+    Works for both full caches (C >= seq_len) and sliding-window caches
+    (C = window): the mask keeps only positions in (pos - C, pos].
+    """
+    B = x.shape[0]
+    C = cache.k.shape[1]
+    pos = cache.pos
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+
+    slot = jnp.mod(pos, C)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
+
+    # absolute position stored in each slot s: the newest write to s
+    slots = jnp.arange(C)
+    abs_pos = pos - jnp.mod(pos - slots, C)      # in (pos-C, pos]
+    valid = abs_pos >= 0
+    mask = valid[None, None, :]                  # (1, 1, C) -> broadcast (B,L,S)
+    mask = jnp.broadcast_to(mask, (B, 1, C))
+
+    out = _sdpa(q, k, v, mask, cfg)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+    out = jnp.einsum("blh,hd->bld", out, params["wo"])
+    return out, KVCache(k=k, v=v, pos=pos + 1)
+
+
+def attention_prefill(params, x, cfg: ModelConfig, capacity: int):
+    """Full forward that also materialises the cache for subsequent decode."""
+    B, L, _ = x.shape
+    positions = jnp.arange(L)[None, :]
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    w = cfg.sliding_window
+    mask = causal_mask(L, w)[None]
+    out = _sdpa(q, k, v, mask, cfg)
+    out = out.reshape(B, L, cfg.n_heads * cfg.hd)
+    out = jnp.einsum("blh,hd->bld", out, params["wo"])
+
+    C = capacity
+    if C >= L:
+        pad = C - L
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:
+        # keep the last C positions, ring-aligned so slot = pos % C
+        start = L - C
+        kc = jnp.roll(k[:, start:], shift=L % C, axis=1)
+        vc = jnp.roll(v[:, start:], shift=L % C, axis=1)
+    cache = KVCache(k=kc, v=vc, pos=jnp.asarray(L, jnp.int32))
+    return out, cache

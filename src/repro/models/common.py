@@ -1,0 +1,169 @@
+"""Shared model-building blocks: param specs with logical sharding axes,
+norms, embeddings, RoPE.
+
+Parameters are plain nested dicts of arrays.  During init every leaf is a
+:class:`ParamSpec` carrying its *logical axis names*; :func:`split_params`
+separates the value pytree from the axes pytree so the launcher can map
+logical axes -> mesh axes (repro/launch/sharding.py) while DEPOSITUM treats
+values as an opaque pytree.
+
+Logical axes used across the zoo:
+  "embed"      d_model dims
+  "qkv"        fused attention projection output (q+k+v heads * head_dim)
+  "heads"      attention-output input dim (n_heads * head_dim)
+  "mlp"        feed-forward hidden dim
+  "experts"    MoE expert dim
+  "vocab"      vocabulary dim
+  "ssm_inner"  mamba inner channel dim
+  None         replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    value: jnp.ndarray
+    axes: tuple[Optional[str], ...]
+
+    def __post_init__(self):
+        if len(self.axes) != self.value.ndim:
+            raise ValueError(
+                f"axes {self.axes} rank != value rank {self.value.shape}"
+            )
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def split_params(tree: PyTree) -> tuple[PyTree, PyTree]:
+    """(ParamSpec pytree) -> (values pytree, axes pytree)."""
+    values = jax.tree_util.tree_map(lambda s: s.value, tree, is_leaf=is_spec)
+    axes = jax.tree_util.tree_map(lambda s: tuple(s.axes), tree, is_leaf=is_spec)
+    return values, axes
+
+
+def is_axes_leaf(x) -> bool:
+    """An axes tuple like ('embed', 'mlp') / (None,) / () is a pytree *leaf*."""
+    return isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x
+    )
+
+
+def map_axes(fn, *axes_trees):
+    """tree_map over axes pytrees without exploding tuples into chars."""
+    return jax.tree_util.tree_map(fn, *axes_trees, is_leaf=is_axes_leaf)
+
+
+class Initializer:
+    """Stateless param factory: splits keys deterministically by call order."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self._key = key
+        self._count = 0
+        self.dtype = dtype
+
+    def _next(self):
+        self._count += 1
+        return jax.random.fold_in(self._key, self._count)
+
+    def normal(self, shape, axes, scale=None):
+        fan_in = shape[0] if len(shape) > 1 else shape[-1]
+        if scale is None:
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        v = jax.random.normal(self._next(), shape, self.dtype) * scale
+        return ParamSpec(v, axes)
+
+    def zeros(self, shape, axes):
+        return ParamSpec(jnp.zeros(shape, self.dtype), axes)
+
+    def ones(self, shape, axes):
+        return ParamSpec(jnp.ones(shape, self.dtype), axes)
+
+    def const(self, value, axes):
+        return ParamSpec(jnp.asarray(value, self.dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def init_rms_norm(ini: Initializer, dim: int):
+    # stored as zero-centered scale (weight = 1 + w), friendlier to l1-prox
+    return {"scale": ini.zeros((dim,), ("embed",))}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)            # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    angles = angles[..., None, :]                        # (..., seq, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(ini: Initializer, vocab: int, d_model: int):
+    return {"table": ini.normal((vocab, d_model), ("vocab", "embed"), scale=0.02)}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def unembed(params, x):
+    return jnp.einsum("...d,vd->...v", x, params["table"])
+
+
+def pad_vocab(vocab: int, multiple: int = 256) -> int:
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+def maybe_checkpoint(fn, cfg):
+    """Apply jax.checkpoint per the config's remat policy.
+
+    "full": recompute everything in the backward scan body (min memory,
+    max recompute traffic).  "dots": save matmul outputs (XLA
+    dots_with_no_batch_dims policy) — trades temp memory for a large cut in
+    recompute FLOPs/HBM traffic on matmul-heavy layers (MoE experts).
+    """
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)

@@ -1,0 +1,166 @@
+"""Seamless-M4T-style encoder-decoder backbone [arXiv:2308.11596].
+
+The speech frontend (mel filterbank + conv feature extractor) is the
+sanctioned stub: the batch provides precomputed *frame embeddings*
+``(B, S, d_model)``.  The text decoder is a causal transformer with
+cross-attention to the encoder memory.
+
+long_500k mode: the encoder self-attends within a sliding window (set via
+``window`` arg), and each decode step cross-attends the full memory — per
+token that is O(S·d), sub-quadratic overall.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (
+    Initializer,
+    embed,
+    init_embedding,
+    init_rms_norm,
+    pad_vocab,
+    rms_norm,
+    split_params,
+)
+from repro.models.mlp import init_mlp, mlp
+from repro.models.transformer import stack_layer_inits
+
+
+def init_params(key, cfg: ModelConfig):
+    kenc, kdec, ke = jax.random.split(key, 3)
+
+    def init_enc_layer(k):
+        ini = Initializer(k, cfg.jnp_dtype)
+        return {
+            "ln1": init_rms_norm(ini, cfg.d_model),
+            "attn": attn.init_attention(ini, cfg),
+            "ln2": init_rms_norm(ini, cfg.d_model),
+            "mlp": init_mlp(ini, cfg),
+        }
+
+    def init_dec_layer(k):
+        ini = Initializer(k, cfg.jnp_dtype)
+        return {
+            "ln1": init_rms_norm(ini, cfg.d_model),
+            "self_attn": attn.init_attention(ini, cfg),
+            "ln_x": init_rms_norm(ini, cfg.d_model),
+            "cross_attn": attn.init_cross_attention(ini, cfg),
+            "ln2": init_rms_norm(ini, cfg.d_model),
+            "mlp": init_mlp(ini, cfg),
+        }
+
+    enc_v, enc_a = stack_layer_inits(init_enc_layer, kenc, cfg.n_encoder_layers)
+    dec_v, dec_a = stack_layer_inits(init_dec_layer, kdec, cfg.n_layers)
+
+    ini = Initializer(ke, cfg.jnp_dtype)
+    V = pad_vocab(cfg.vocab_size)
+    emb_v, emb_a = split_params(init_embedding(ini, V, cfg.d_model))
+    fin_v, fin_a = split_params(init_rms_norm(ini, cfg.d_model))
+    encn_v, encn_a = split_params(init_rms_norm(ini, cfg.d_model))
+    head_v, head_a = split_params(
+        {"w": ini.normal((cfg.d_model, V), ("embed", "vocab"), scale=0.02)}
+    )
+    params = {
+        "encoder": enc_v, "decoder": dec_v, "embed": emb_v,
+        "enc_norm": encn_v, "final_norm": fin_v, "lm_head": head_v,
+    }
+    axes = {
+        "encoder": enc_a, "decoder": dec_a, "embed": emb_a,
+        "enc_norm": encn_a, "final_norm": fin_a, "lm_head": head_a,
+    }
+    return params, axes
+
+
+def encode(params, frames, cfg: ModelConfig, *, window: int = 0):
+    """frames: (B, S, d_model) precomputed frontend embeddings."""
+    x = frames.astype(cfg.jnp_dtype)
+
+    def body(h, layer):
+        a = attn.attention_bidir(
+            layer["attn"], rms_norm(h, layer["ln1"]["scale"]), cfg, window=window
+        )
+        h = h + a
+        h = h + mlp(layer["mlp"], rms_norm(h, layer["ln2"]["scale"]), cfg)
+        return h, None
+
+    from repro.models.common import maybe_checkpoint
+    if cfg.remat:
+        body = maybe_checkpoint(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["encoder"], unroll=cfg.scan_unroll or 1)
+    return rms_norm(x, params["enc_norm"]["scale"])
+
+
+def _decoder_block_train(layer, h, memory, cfg):
+    a = attn.attention_train(
+        layer["self_attn"], rms_norm(h, layer["ln1"]["scale"]), cfg
+    )
+    h = h + a
+    c = attn.cross_attention(
+        layer["cross_attn"], rms_norm(h, layer["ln_x"]["scale"]), memory, cfg
+    )
+    h = h + c
+    h = h + mlp(layer["mlp"], rms_norm(h, layer["ln2"]["scale"]), cfg)
+    return h
+
+
+def forward_train(params, batch: dict, cfg: ModelConfig, *, window: int = 0,
+                  memory=None):
+    """batch: {"frames": (B,S,d), "tokens": (B,L)} -> decoder logits."""
+    if memory is None:
+        memory = encode(params, batch["frames"], cfg, window=window)
+    x = embed(params["embed"], batch["tokens"]).astype(cfg.jnp_dtype)
+
+    def body(h, layer):
+        return _decoder_block_train(layer, h, memory, cfg), None
+
+    from repro.models.common import maybe_checkpoint
+    if cfg.remat:
+        body = maybe_checkpoint(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["decoder"], unroll=cfg.scan_unroll or 1)
+    x = rms_norm(x, params["final_norm"]["scale"])
+    logits = jnp.einsum("bld,dv->blv", x, params["lm_head"]["w"])
+    return logits, {"moe_aux": jnp.zeros((), jnp.float32)}
+
+
+class EncDecCache(NamedTuple):
+    kv: attn.KVCache          # decoder self-attn caches, stacked (n_layers,...)
+    memory: jnp.ndarray       # (B, S, d) encoder output
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, capacity: int,
+                      memory_len: int) -> EncDecCache:
+    kv = attn.init_kv_cache(cfg, batch, capacity, cfg.jnp_dtype)
+    kv = jax.tree_util.tree_map(
+        lambda v: jnp.broadcast_to(v[None], (cfg.n_layers,) + v.shape), kv
+    )
+    memory = jnp.zeros((batch, memory_len, cfg.d_model), cfg.jnp_dtype)
+    return EncDecCache(kv=kv, memory=memory)
+
+
+def forward_decode(params, batch: dict, cache: EncDecCache, cfg: ModelConfig):
+    """One decoder token against cached self-attn KV + fixed encoder memory."""
+    x = embed(params["embed"], batch["tokens"]).astype(cfg.jnp_dtype)
+    memory = cache.memory
+
+    def body(h, scanned):
+        layer, layer_kv = scanned
+        a, new_kv = attn.attention_decode(
+            layer["self_attn"], rms_norm(h, layer["ln1"]["scale"]), layer_kv, cfg
+        )
+        h = h + a
+        c = attn.cross_attention(
+            layer["cross_attn"], rms_norm(h, layer["ln_x"]["scale"]), memory, cfg
+        )
+        h = h + c
+        h = h + mlp(layer["mlp"], rms_norm(h, layer["ln2"]["scale"]), cfg)
+        return h, new_kv
+
+    x, new_kv = jax.lax.scan(body, x, (params["decoder"], cache.kv), unroll=cfg.scan_unroll or 1)
+    x = rms_norm(x, params["final_norm"]["scale"])
+    logits = jnp.einsum("bld,dv->blv", x, params["lm_head"]["w"])
+    return logits, EncDecCache(kv=new_kv, memory=memory)

@@ -1,0 +1,201 @@
+"""Zamba2-style hybrid backbone [arXiv:2411.15242]: a stack of Mamba2 layers
+with a single *shared* attention+MLP transformer block invoked every
+``shared_attn_every`` layers (weights reused at each invocation; the published
+model adds per-invocation LoRA deltas — we share fully, noted in DESIGN.md).
+
+Layer layout for n_layers=54, every=6: [5 mamba, shared, 5 mamba, shared, ...]
+implemented as an outer scan over n_groups = n_layers // every groups; each
+group = (every-1 scanned mamba layers) + shared block.  Mamba params are
+stacked (n_groups, every-1, ...); the shared block is a single param set.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (
+    Initializer,
+    embed,
+    init_embedding,
+    init_rms_norm,
+    pad_vocab,
+    rms_norm,
+    split_params,
+)
+from repro.models.mamba2 import (
+    MambaCache,
+    init_mamba,
+    init_mamba_cache,
+    mamba_block,
+    mamba_decode,
+)
+from repro.models.mlp import init_mlp, mlp
+from repro.models.transformer import stack_layer_inits
+
+
+def _group_shape(cfg: ModelConfig) -> tuple[int, int]:
+    every = cfg.shared_attn_every
+    assert every >= 2 and cfg.n_layers % every == 0, (
+        f"hybrid needs n_layers ({cfg.n_layers}) divisible by "
+        f"shared_attn_every ({every})"
+    )
+    return cfg.n_layers // every, every - 1  # (n_groups, mamba per group)
+
+
+def init_params(key, cfg: ModelConfig):
+    n_groups, per_group = _group_shape(cfg)
+    km, ks, ke = jax.random.split(key, 3)
+
+    def init_one_mamba(k):
+        return {
+            "ln": init_rms_norm(Initializer(k, cfg.jnp_dtype), cfg.d_model),
+            "mamba": init_mamba(Initializer(jax.random.fold_in(k, 7),
+                                            cfg.jnp_dtype), cfg),
+        }
+
+    mamba_v, mamba_a = stack_layer_inits(init_one_mamba, km, n_groups * per_group)
+    # reshape leading dim to (n_groups, per_group)
+    mamba_v = jax.tree_util.tree_map(
+        lambda v: v.reshape((n_groups, per_group) + v.shape[1:]), mamba_v
+    )
+    from repro.models.common import map_axes
+    mamba_a = map_axes(lambda a: ("groups",) + tuple(a), mamba_a)
+
+    ini = Initializer(ks, cfg.jnp_dtype)
+    shared = {
+        "ln1": init_rms_norm(ini, cfg.d_model),
+        "attn": attn.init_attention(ini, cfg),
+        "ln2": init_rms_norm(ini, cfg.d_model),
+        "mlp": init_mlp(ini, cfg),
+    }
+    shared_v, shared_a = split_params(shared)
+
+    inie = Initializer(ke, cfg.jnp_dtype)
+    V = pad_vocab(cfg.vocab_size)
+    emb = init_embedding(inie, V, cfg.d_model)
+    fin = init_rms_norm(inie, cfg.d_model)
+    emb_v, emb_a = split_params(emb)
+    fin_v, fin_a = split_params(fin)
+    head = {"w": inie.normal((cfg.d_model, V), ("embed", "vocab"), scale=0.02)}
+    head_v, head_a = split_params(head)
+
+    params = {
+        "mamba": mamba_v, "shared": shared_v, "embed": emb_v,
+        "final_norm": fin_v, "lm_head": head_v,
+    }
+    axes = {
+        "mamba": mamba_a, "shared": shared_a, "embed": emb_a,
+        "final_norm": fin_a, "lm_head": head_a,
+    }
+    return params, axes
+
+
+def forward_train(params, batch: dict, cfg: ModelConfig, *, window: int = 0):
+    x = embed(params["embed"], batch["tokens"]).astype(cfg.jnp_dtype)
+
+    def mamba_body(h, layer_params):
+        out, _ = mamba_block(
+            layer_params["mamba"], rms_norm(h, layer_params["ln"]["scale"]), cfg
+        )
+        return h + out, None
+
+    def group_body(h, group_params):
+        h, _ = jax.lax.scan(mamba_body, h, group_params, unroll=cfg.scan_unroll or 1)
+        sp = params["shared"]
+        a = attn.attention_train(
+            sp["attn"], rms_norm(h, sp["ln1"]["scale"]), cfg, window=window
+        )
+        h = h + a
+        h = h + mlp(sp["mlp"], rms_norm(h, sp["ln2"]["scale"]), cfg)
+        return h, None
+
+    from repro.models.common import maybe_checkpoint
+    if cfg.remat:
+        group_body = maybe_checkpoint(group_body, cfg)
+    x, _ = jax.lax.scan(group_body, x, params["mamba"], unroll=cfg.scan_unroll or 1)
+    x = rms_norm(x, params["final_norm"]["scale"])
+    logits = jnp.einsum("bld,dv->blv", x, params["lm_head"]["w"])
+    return logits, {"moe_aux": jnp.zeros((), jnp.float32)}
+
+
+class HybridCache(NamedTuple):
+    mamba: MambaCache        # leaves stacked (n_groups, per_group, ...)
+    kv: attn.KVCache         # leaves stacked (n_groups, ...)
+
+
+def forward_prefill(params, batch: dict, cfg: ModelConfig, capacity: int):
+    """Full forward materialising mamba states + shared-block KV caches."""
+    x = embed(params["embed"], batch["tokens"]).astype(cfg.jnp_dtype)
+
+    def mamba_body(h, layer_params):
+        out, cache = mamba_block(
+            layer_params["mamba"], rms_norm(h, layer_params["ln"]["scale"]), cfg
+        )
+        return h + out, cache
+
+    def group_body(h, group_params):
+        h, mcaches = jax.lax.scan(mamba_body, h, group_params, unroll=cfg.scan_unroll or 1)
+        sp = params["shared"]
+        a, kv = attn.attention_prefill(
+            sp["attn"], rms_norm(h, sp["ln1"]["scale"]), cfg, capacity
+        )
+        h = h + a
+        h = h + mlp(sp["mlp"], rms_norm(h, sp["ln2"]["scale"]), cfg)
+        return h, (mcaches, kv)
+
+    from repro.models.common import maybe_checkpoint
+    if cfg.remat:
+        group_body = maybe_checkpoint(group_body, cfg)
+    x, (mcaches, kvs) = jax.lax.scan(group_body, x, params["mamba"], unroll=cfg.scan_unroll or 1)
+    x = rms_norm(x[:, -1:, :], params["final_norm"]["scale"])
+    logits = jnp.einsum("bld,dv->blv", x, params["lm_head"]["w"])
+    return logits, HybridCache(mamba=mcaches, kv=kvs)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, capacity: int) -> HybridCache:
+    n_groups, per_group = _group_shape(cfg)
+    mc = init_mamba_cache(cfg, batch, cfg.jnp_dtype)
+    mc = jax.tree_util.tree_map(
+        lambda v: jnp.broadcast_to(v[None, None],
+                                   (n_groups, per_group) + v.shape), mc
+    )
+    kv = attn.init_kv_cache(cfg, batch, capacity, cfg.jnp_dtype)
+    kv = jax.tree_util.tree_map(
+        lambda v: jnp.broadcast_to(v[None], (n_groups,) + v.shape), kv
+    )
+    return HybridCache(mamba=mc, kv=kv)
+
+
+def forward_decode(params, batch: dict, cache: HybridCache, cfg: ModelConfig):
+    x = embed(params["embed"], batch["tokens"]).astype(cfg.jnp_dtype)
+
+    def mamba_body(h, scanned):
+        layer_params, layer_cache = scanned
+        out, new_cache = mamba_decode(
+            layer_params["mamba"],
+            rms_norm(h, layer_params["ln"]["scale"]),
+            layer_cache, cfg,
+        )
+        return h + out, new_cache
+
+    def group_body(h, scanned):
+        group_params, group_mcache, group_kv = scanned
+        h, new_mcache = jax.lax.scan(mamba_body, h, (group_params, group_mcache), unroll=cfg.scan_unroll or 1)
+        sp = params["shared"]
+        a, new_kv = attn.attention_decode(
+            sp["attn"], rms_norm(h, sp["ln1"]["scale"]), group_kv, cfg
+        )
+        h = h + a
+        h = h + mlp(sp["mlp"], rms_norm(h, sp["ln2"]["scale"]), cfg)
+        return h, (new_mcache, new_kv)
+
+    x, (new_m, new_kv) = jax.lax.scan(
+        group_body, x, (params["mamba"], cache.mamba, cache.kv), unroll=cfg.scan_unroll or 1
+    )
+    x = rms_norm(x, params["final_norm"]["scale"])
+    logits = jnp.einsum("bld,dv->blv", x, params["lm_head"]["w"])
+    return logits, HybridCache(mamba=new_m, kv=new_kv)

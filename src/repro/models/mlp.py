@@ -1,0 +1,101 @@
+"""Feed-forward blocks: SwiGLU / GELU MLP and capacity-based top-k MoE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Initializer
+
+
+def init_mlp(ini: Initializer, cfg: ModelConfig, d_ff: int | None = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": ini.normal((d, ff), ("embed", "mlp")),
+            "w_up": ini.normal((d, ff), ("embed", "mlp")),
+            "w_down": ini.normal((ff, d), ("mlp", "embed")),
+        }
+    return {
+        "w_up": ini.normal((d, ff), ("embed", "mlp")),
+        "w_down": ini.normal((ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp(params, x, cfg: ModelConfig):
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — GShard/Switch-style static-capacity dispatch.
+#
+# Static shapes + one-hot einsum dispatch make expert parallelism a pure
+# sharding decision: sharding the E dim over a mesh axis turns the dispatch
+# and combine einsums into all-to-alls under GSPMD.
+# ---------------------------------------------------------------------------
+
+def init_moe(ini: Initializer, cfg: ModelConfig):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ini.normal((d, E), ("embed", None), scale=0.02),
+        "w_gate": ini.normal((E, d, ff), ("experts", "embed", "mlp")),
+        "w_up": ini.normal((E, d, ff), ("experts", "embed", "mlp")),
+        "w_down": ini.normal((E, ff, d), ("experts", "mlp", "embed")),
+    }
+
+
+def moe(params, x, cfg: ModelConfig):
+    """x: (B, L, d) -> (out, aux_loss).  Top-k routing with capacity drop.
+
+    Dispatch rows are (token, k) pairs (R = T*K rows); each row goes to one
+    expert buffer slot.  Tokens beyond an expert's capacity C are dropped
+    (standard static-shape TPU MoE).
+    """
+    B, L, d = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * L
+    xt = x.reshape(T, d)
+
+    logits = (xt @ params["router"]).astype(jnp.float32)      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)             # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balance auxiliary loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)                              # mean router prob
+    one_hot_topk = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (T,K,E)
+    fe = jnp.mean(jnp.sum(one_hot_topk, axis=1), axis=0)      # routed fraction
+    aux = E * jnp.sum(me * fe / K)
+
+    # per-expert capacity
+    C = max(1, int(cfg.capacity_factor * T * K / E))
+
+    flat_idx = gate_idx.reshape(-1)                           # (R,) expert ids
+    row_onehot = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)  # (R, E)
+    pos_1based = jnp.cumsum(row_onehot, axis=0) * row_onehot
+    pos = jnp.sum(pos_1based, axis=-1) - 1                    # slot in buffer
+    keep = pos < C
+    pos = jnp.clip(pos, 0, C - 1)
+
+    # scatter/gather dispatch: O(R*d) data movement, no (T,E,C) tensor
+    x_rows = xt[jnp.arange(T).repeat(K)]                      # (R, d)
+    buf_idx = flat_idx * C + pos                              # (R,) slot ids
+    contrib = x_rows * keep[:, None].astype(xt.dtype)
+    expert_in = (
+        jnp.zeros((E * C, d), xt.dtype).at[buf_idx].add(contrib).reshape(E, C, d)
+    )
+
+    # batched expert FFN (swiglu)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"])
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+    # combine: gather each row's slot, weight by its (renormalised) gate
+    gates_row = gate_vals.reshape(-1).astype(xt.dtype) * keep.astype(xt.dtype)
+    out_rows = expert_out.reshape(E * C, d)[buf_idx] * gates_row[:, None]
+    out = out_rows.reshape(T, K, d).sum(axis=1)
+    return out.reshape(B, L, d), aux

@@ -1,0 +1,111 @@
+"""Unified model interface over all families in the zoo."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, ssm, transformer
+from repro.models.common import pad_vocab
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token CE. logits: (B,L,V) labels: (B,L) int32; mask (B,L) opt."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[..., tuple[Any, Any]]        # key -> (params, axes)
+    forward_train: Callable[..., tuple[Any, Any]]
+    loss: Callable[..., tuple[jnp.ndarray, dict]]
+    forward_decode: Callable[..., tuple[Any, Any]]
+    init_decode_cache: Callable[..., Any]
+    forward_prefill: Optional[Callable[..., tuple[Any, Any]]] = None
+
+
+def _make_loss(fwd, cfg: ModelConfig):
+    def loss(params, batch):
+        logits, aux = fwd(params, batch, cfg)
+        labels = batch["labels"]
+        if cfg.family == "vlm":
+            # logits cover [vision tokens | text tokens]; labels are text-only
+            logits = logits[:, logits.shape[1] - labels.shape[1]:, :]
+        mask = batch.get("loss_mask")
+        ce = cross_entropy(logits, labels, mask)
+        total = ce + cfg.router_aux_weight * aux.get("moe_aux", 0.0)
+        return total, {"ce": ce, **aux}
+
+    return loss
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = transformer
+        return Model(
+            cfg=cfg,
+            init=lambda key: mod.init_params(key, cfg),
+            forward_train=lambda p, b, c=cfg, **kw: mod.forward_train(p, b, c, **kw),
+            loss=_make_loss(mod.forward_train, cfg),
+            forward_decode=lambda p, b, cache: mod.forward_decode(p, b, cache, cfg),
+            init_decode_cache=lambda batch, capacity, **kw: mod.init_decode_cache(
+                cfg, batch, capacity
+            ),
+            forward_prefill=lambda p, b, capacity: mod.forward_prefill(
+                p, b, cfg, capacity
+            ),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: ssm.init_params(key, cfg),
+            forward_train=lambda p, b, c=cfg, **kw: ssm.forward_train(p, b, c, **kw),
+            loss=_make_loss(ssm.forward_train, cfg),
+            forward_decode=lambda p, b, cache: ssm.forward_decode(p, b, cache, cfg),
+            init_decode_cache=lambda batch, capacity=0, **kw: ssm.init_decode_cache(
+                cfg, batch, capacity
+            ),
+            forward_prefill=lambda p, b, capacity=0: ssm.forward_prefill(
+                p, b, cfg, capacity
+            ),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: hybrid.init_params(key, cfg),
+            forward_train=lambda p, b, c=cfg, **kw: hybrid.forward_train(p, b, c, **kw),
+            loss=_make_loss(hybrid.forward_train, cfg),
+            forward_decode=lambda p, b, cache: hybrid.forward_decode(p, b, cache, cfg),
+            init_decode_cache=lambda batch, capacity, **kw: hybrid.init_decode_cache(
+                cfg, batch, capacity
+            ),
+            forward_prefill=lambda p, b, capacity: hybrid.forward_prefill(
+                p, b, cfg, capacity
+            ),
+        )
+    if fam == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(key, cfg),
+            forward_train=lambda p, b, c=cfg, **kw: encdec.forward_train(p, b, c, **kw),
+            loss=_make_loss(encdec.forward_train, cfg),
+            forward_decode=lambda p, b, cache: encdec.forward_decode(p, b, cache, cfg),
+            init_decode_cache=lambda batch, capacity, memory_len=0, **kw: (
+                encdec.init_decode_cache(cfg, batch, capacity, memory_len)
+            ),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return pad_vocab(cfg.vocab_size)

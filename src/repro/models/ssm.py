@@ -1,0 +1,105 @@
+"""Pure Mamba2 language model (attention-free), layer-scanned."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (
+    Initializer,
+    embed,
+    init_embedding,
+    init_rms_norm,
+    pad_vocab,
+    rms_norm,
+    split_params,
+)
+from repro.models.mamba2 import (
+    init_mamba,
+    init_mamba_cache,
+    mamba_block,
+    mamba_decode,
+)
+from repro.models.transformer import stack_layer_inits
+
+
+def init_params(key, cfg: ModelConfig):
+    kb, ke = jax.random.split(key)
+
+    def init_layer(k):
+        return {
+            "ln": init_rms_norm(Initializer(k, cfg.jnp_dtype), cfg.d_model),
+            "mamba": init_mamba(
+                Initializer(jax.random.fold_in(k, 7), cfg.jnp_dtype), cfg
+            ),
+        }
+
+    blocks_v, blocks_a = stack_layer_inits(init_layer, kb, cfg.n_layers)
+    ini = Initializer(ke, cfg.jnp_dtype)
+    V = pad_vocab(cfg.vocab_size)
+    emb_v, emb_a = split_params(init_embedding(ini, V, cfg.d_model))
+    fin_v, fin_a = split_params(init_rms_norm(ini, cfg.d_model))
+    # mamba2-130m ties embeddings
+    params = {"blocks": blocks_v, "embed": emb_v, "final_norm": fin_v}
+    axes = {"blocks": blocks_a, "embed": emb_a, "final_norm": fin_a}
+    return params, axes
+
+
+def forward_train(params, batch: dict, cfg: ModelConfig, *, window: int = 0):
+    x = embed(params["embed"], batch["tokens"]).astype(cfg.jnp_dtype)
+
+    def body(h, layer):
+        out, _ = mamba_block(
+            layer["mamba"], rms_norm(h, layer["ln"]["scale"]), cfg
+        )
+        return h + out, None
+
+    from repro.models.common import maybe_checkpoint
+    if cfg.remat:
+        body = maybe_checkpoint(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll or 1)
+    x = rms_norm(x, params["final_norm"]["scale"])
+    logits = jnp.einsum("bld,vd->blv", x, params["embed"]["table"])
+    return logits, {"moe_aux": jnp.zeros((), jnp.float32)}
+
+
+def forward_prefill(params, batch: dict, cfg: ModelConfig, capacity: int = 0):
+    """Full forward that also materialises per-layer SSD/conv states."""
+    x = embed(params["embed"], batch["tokens"]).astype(cfg.jnp_dtype)
+
+    def body(h, layer):
+        out, cache = mamba_block(
+            layer["mamba"], rms_norm(h, layer["ln"]["scale"]), cfg
+        )
+        return h + out, cache
+
+    from repro.models.common import maybe_checkpoint
+    if cfg.remat:
+        body = maybe_checkpoint(body, cfg)
+    x, caches = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll or 1)
+    x = rms_norm(x[:, -1:, :], params["final_norm"]["scale"])
+    logits = jnp.einsum("bld,vd->blv", x, params["embed"]["table"])
+    return logits, caches
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, capacity: int = 0):
+    one = init_mamba_cache(cfg, batch, cfg.jnp_dtype)
+    return jax.tree_util.tree_map(
+        lambda v: jnp.broadcast_to(v[None], (cfg.n_layers,) + v.shape), one
+    )
+
+
+def forward_decode(params, batch: dict, cache, cfg: ModelConfig):
+    x = embed(params["embed"], batch["tokens"]).astype(cfg.jnp_dtype)
+
+    def body(h, scanned):
+        layer, layer_cache = scanned
+        out, new_cache = mamba_decode(
+            layer["mamba"], rms_norm(h, layer["ln"]["scale"]), layer_cache, cfg
+        )
+        return h + out, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache), unroll=cfg.scan_unroll or 1)
+    x = rms_norm(x, params["final_norm"]["scale"])
+    logits = jnp.einsum("bld,vd->blv", x, params["embed"]["table"])
+    return logits, new_cache

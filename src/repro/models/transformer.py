@@ -1,0 +1,197 @@
+"""Decoder-only transformer backbone (dense / MoE / VLM), layer-scanned.
+
+Parameters are stacked over layers so the forward is a ``lax.scan`` (small
+HLO, cheap multi-hundred-layer SPMD partitioning) with optional remat.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (
+    Initializer,
+    ParamSpec,
+    embed,
+    init_embedding,
+    init_rms_norm,
+    pad_vocab,
+    rms_norm,
+    split_params,
+)
+from repro.models.mlp import init_mlp, init_moe, mlp, moe
+
+
+def stack_layer_inits(init_fn, key, n_layers: int):
+    """vmap an init over layer keys; returns (stacked values, axes w/ 'layers')."""
+    def values_fn(k):
+        vals, _ = split_params(init_fn(k))
+        return vals
+
+    keys = jax.random.split(key, n_layers)
+    vals = jax.vmap(values_fn)(keys)
+    _, axes = split_params(init_fn(key))
+    from repro.models.common import map_axes
+    axes = map_axes(lambda a: ("layers",) + tuple(a), axes)
+    return vals, axes
+
+
+# ---------------------------------------------------------------------------
+# One decoder block
+# ---------------------------------------------------------------------------
+
+def init_block(ini_key, cfg: ModelConfig):
+    ini = Initializer(ini_key, cfg.jnp_dtype)
+    p = {
+        "ln1": init_rms_norm(ini, cfg.d_model),
+        "attn": attn.init_attention(ini, cfg),
+        "ln2": init_rms_norm(ini, cfg.d_model),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe(ini, cfg)
+    else:
+        p["mlp"] = init_mlp(ini, cfg)
+    return p
+
+
+def block_train(params, x, cfg: ModelConfig, *, window: int = 0):
+    h = attn.attention_train(
+        params["attn"], rms_norm(x, params["ln1"]["scale"]), cfg, window=window
+    )
+    x = x + h
+    normed = rms_norm(x, params["ln2"]["scale"])
+    if cfg.family == "moe":
+        out, aux = moe(params["moe"], normed, cfg)
+    else:
+        out, aux = mlp(params["mlp"], normed, cfg), 0.0
+    return x + out, aux
+
+
+def block_decode(params, x, cache: attn.KVCache, cfg: ModelConfig):
+    h, cache = attn.attention_decode(
+        params["attn"], rms_norm(x, params["ln1"]["scale"]), cache, cfg
+    )
+    x = x + h
+    normed = rms_norm(x, params["ln2"]["scale"])
+    if cfg.family == "moe":
+        out, _ = moe(params["moe"], normed, cfg)
+    else:
+        out = mlp(params["mlp"], normed, cfg)
+    return x + out, cache
+
+
+def block_prefill(params, x, cfg: ModelConfig, capacity: int):
+    h, cache = attn.attention_prefill(
+        params["attn"], rms_norm(x, params["ln1"]["scale"]), cfg, capacity
+    )
+    x = x + h
+    normed = rms_norm(x, params["ln2"]["scale"])
+    if cfg.family == "moe":
+        out, _ = moe(params["moe"], normed, cfg)
+    else:
+        out = mlp(params["mlp"], normed, cfg)
+    return x + out, cache
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    """Returns (params pytree, logical-axes pytree)."""
+    V = pad_vocab(cfg.vocab_size)
+    kb, ke, kf = jax.random.split(key, 3)
+    blocks_v, blocks_a = stack_layer_inits(
+        lambda k: init_block(k, cfg), kb, cfg.n_layers
+    )
+    ini = Initializer(ke, cfg.jnp_dtype)
+    emb = init_embedding(ini, V, cfg.d_model)
+    fin = init_rms_norm(ini, cfg.d_model)
+    params = {"blocks": blocks_v}
+    axes = {"blocks": blocks_a}
+    emb_v, emb_a = split_params(emb)
+    fin_v, fin_a = split_params(fin)
+    params["embed"], axes["embed"] = emb_v, emb_a
+    params["final_norm"], axes["final_norm"] = fin_v, fin_a
+    if not cfg.tie_embeddings:
+        head = {"w": Initializer(kf, cfg.jnp_dtype).normal(
+            (cfg.d_model, V), ("embed", "vocab"), scale=0.02)}
+        head_v, head_a = split_params(head)
+        params["lm_head"], axes["lm_head"] = head_v, head_a
+    return params, axes
+
+
+def _embed_inputs(params, batch: dict, cfg: ModelConfig):
+    """tokens (+ optional vision embeds prepended) -> (B, L, d)."""
+    x = embed(params["embed"], batch["tokens"]).astype(cfg.jnp_dtype)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        vis = batch["vision_embeds"].astype(cfg.jnp_dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+    return x
+
+
+def _lm_logits(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bld,vd->blv", x, params["embed"]["table"])
+    return jnp.einsum("bld,dv->blv", x, params["lm_head"]["w"])
+
+
+def forward_train(params, batch: dict, cfg: ModelConfig, *, window: int = 0):
+    """Full causal forward.  Returns (logits, aux_losses dict)."""
+    x = _embed_inputs(params, batch, cfg)
+
+    def body(carry, layer_params):
+        h, aux = carry
+        h, a = block_train(layer_params, h, cfg, window=window)
+        return (h, aux + a), None
+
+    from repro.models.common import maybe_checkpoint
+    if cfg.remat:
+        body = maybe_checkpoint(body, cfg)
+    (x, moe_aux), _ = jax.lax.scan(body, (x, 0.0), params["blocks"], unroll=cfg.scan_unroll or 1)
+    x = rms_norm(x, params["final_norm"]["scale"])
+    logits = _lm_logits(params, x, cfg)
+    return logits, {"moe_aux": moe_aux / max(cfg.n_layers, 1)}
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, capacity: int):
+    """Stacked per-layer KV caches for the scanned decode."""
+    one = attn.init_kv_cache(cfg, batch, capacity, cfg.jnp_dtype)
+    return jax.tree_util.tree_map(
+        lambda v: jnp.broadcast_to(v[None], (cfg.n_layers,) + v.shape), one
+    )
+
+
+def forward_decode(params, batch: dict, cache, cfg: ModelConfig):
+    """One-token decode. batch: {"tokens": (B, 1)}. cache: stacked KVCache."""
+    x = embed(params["embed"], batch["tokens"]).astype(cfg.jnp_dtype)
+
+    def body(h, scanned):
+        layer_params, layer_cache = scanned
+        h, new_cache = block_decode(layer_params, h, layer_cache, cfg)
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], cache), unroll=cfg.scan_unroll or 1)
+    x = rms_norm(x, params["final_norm"]["scale"])
+    logits = _lm_logits(params, x, cfg)
+    return logits, new_caches
+
+
+def forward_prefill(params, batch: dict, cfg: ModelConfig, capacity: int):
+    """Full forward + cache materialisation for subsequent decode."""
+    x = _embed_inputs(params, batch, cfg)
+
+    def body(h, layer_params):
+        h, cache = block_prefill(layer_params, h, cfg, capacity)
+        return h, cache
+
+    from repro.models.common import maybe_checkpoint
+    if cfg.remat:
+        body = maybe_checkpoint(body, cfg)
+    x, caches = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll or 1)
+    x = rms_norm(x, params["final_norm"]["scale"])
+    logits = _lm_logits(params, x[:, -1:, :], cfg)
+    return logits, caches

@@ -1,0 +1,1 @@
+from repro.serving.serve import ServeConfig, BatchedServer  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.training.train_loop import FederatedTrainer, TrainerConfig  # noqa: F401
+from repro.training.checkpoint import save_checkpoint, restore_checkpoint  # noqa: F401

@@ -1,0 +1,75 @@
+"""Checkpointing: pytree <-> single .npz file keyed by tree paths.
+
+No orbax in this container; paths are stable as long as the pytree structure
+is (which our functional param dicts guarantee).  Saves are atomic
+(write-to-tmp + rename).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _to_numpy(v) -> np.ndarray:
+    arr = np.asarray(v)
+    if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+        # npz cannot store ml_dtypes; upcast losslessly (restore re-casts)
+        arr = arr.astype(np.float32)
+    return arr
+
+
+def save_checkpoint(path: str, tree: Any, step: int | None = None) -> None:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {_path_str(p): _to_numpy(v) for p, v in flat}
+    if step is not None:
+        arrays["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def restore_checkpoint(path: str, template: Any) -> tuple[Any, int | None]:
+    """Restore into the structure of ``template``; returns (tree, step)."""
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, tmpl in flat:
+            key = _path_str(p)
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = data[key]
+            if arr.shape != tmpl.shape:
+                raise ValueError(
+                    f"shape mismatch at {key}: ckpt {arr.shape} vs "
+                    f"template {tmpl.shape}"
+                )
+            leaves.append(arr.astype(tmpl.dtype) if hasattr(tmpl, "dtype") else arr)
+        step = int(data["__step__"]) if "__step__" in data else None
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

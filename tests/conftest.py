@@ -1,0 +1,8 @@
+import os
+
+# keep tests single-device (the dry-run sets its own flag in a subprocess)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,63 @@
+"""HLO collective parser + roofline math (pure python)."""
+import pytest
+
+from repro.analysis.hlo import collective_bytes, parse_collectives
+from repro.analysis.roofline import model_flops, roofline_terms
+from repro.configs import get_config
+
+HLO_SAMPLE = """
+HloModule jit_step
+
+ENTRY %main {
+  %p0 = bf16[16,2048,128]{2,1,0} parameter(0)
+  %ag = bf16[16,2048,2048]{2,1,0} all-gather(%p0), dimensions={2}
+  %ar = f32[1024]{0} all-reduce(%x), to_apply=%add
+  %rs = bf16[128,64]{1,0} reduce-scatter(%y), dimensions={0}
+  %cp = bf16[8,256]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a = f32[4,4,32]{2,1,0} all-to-all(%w), dimensions={0}
+  %ag2s = (bf16[2,2]{1,0}, bf16[2,4]{1,0}) all-gather-start(%q), dimensions={1}
+  %ag2d = bf16[2,4]{1,0} all-gather-done(%ag2s)
+  ROOT %t = tuple(%ag)
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    out = parse_collectives(HLO_SAMPLE)
+    assert out["all-gather"]["count"] == 2  # plain + -start ( -done skipped)
+    ag_plain = 16 * 2048 * 2048 * 2
+    assert out["all-gather"]["bytes"] >= ag_plain
+    assert out["all-reduce"]["bytes"] == 1024 * 4
+    assert out["reduce-scatter"]["bytes"] == 128 * 64 * 2
+    assert out["collective-permute"]["bytes"] == 8 * 256 * 2
+    assert out["all-to-all"]["bytes"] == 4 * 4 * 32 * 4
+    assert collective_bytes(HLO_SAMPLE) == sum(
+        v["bytes"] for v in out.values())
+
+
+def test_async_done_not_double_counted():
+    out = parse_collectives(HLO_SAMPLE)
+    # -start counted once (halved tuple), -done skipped
+    start_bytes = (2 * 2 + 2 * 4) * 2 // 2
+    assert out["all-gather"]["bytes"] == 16 * 2048 * 2048 * 2 + start_bytes
+
+
+def test_roofline_dominant_term():
+    t = roofline_terms(197e12, 0.0, 0.0)        # exactly 1s of compute
+    assert t["dominant"] == "compute" and abs(t["t_compute_s"] - 1.0) < 1e-9
+    t = roofline_terms(0.0, 819e9, 0.0)
+    assert t["dominant"] == "memory"
+    t = roofline_terms(1.0, 1.0, 50e9)
+    assert t["dominant"] == "collective"
+    assert t["step_lower_bound_s"] == t["t_collective_s"]
+
+
+def test_model_flops_semantics():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    train = model_flops(cfg, "train_4k")
+    dec = model_flops(cfg, "decode_32k")
+    # train: 6 * N_active * tokens; decode: 2 * N_active * batch
+    assert train == pytest.approx(6 * cfg.active_param_count() * 4096 * 256)
+    assert dec == pytest.approx(2 * cfg.active_param_count() * 128)
+    # MoE active < total
+    assert cfg.active_param_count() < cfg.param_count() / 5

@@ -1,0 +1,34 @@
+"""Checkpoint save/restore invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training import restore_checkpoint, save_checkpoint
+
+
+def test_roundtrip_nested(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": [jnp.zeros((2,)), jnp.full((1,), 7.0)]}}
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, tree, step=42)
+    out, step = restore_checkpoint(path, tree)
+    assert step == 42
+    for a, b in zip(np.asarray(out["a"]), np.asarray(tree["a"])):
+        np.testing.assert_array_equal(a, b)
+    assert out["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    tree = {"w": jnp.ones((3, 3))}
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, tree)
+    with pytest.raises(ValueError):
+        restore_checkpoint(path, {"w": jnp.ones((2, 2))})
+
+
+def test_missing_leaf_rejected(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, {"w": jnp.ones((2,))})
+    with pytest.raises(KeyError):
+        restore_checkpoint(path, {"w": jnp.ones((2,)), "v": jnp.ones((2,))})

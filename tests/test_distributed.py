@@ -1,0 +1,145 @@
+"""Distributed-semantics tests (subprocess: needs >1 host device).
+
+These spawn a fresh python with xla_force_host_platform_device_count=8 so
+the in-process jax (single CPU device) is untouched.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, timeout=560) -> str:
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+    env.pop("JAX_PLATFORMS", None)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return proc.stdout
+
+
+def test_ppermute_gossip_equals_dense_mix():
+    """shard_map ring ppermute mixer == dense einsum with the Metropolis W."""
+    out = run_py(textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.gossip import make_dense_mixer
+        from repro.core.topology import mixing_matrix
+
+        mesh = jax.make_mesh((8,), ("data",))
+        n, d = 8, 16
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((n, d)),
+                        jnp.float32)
+        xs = jax.device_put(x, NamedSharding(mesh, P("data")))
+
+        W = mixing_matrix("ring", n)
+        dense = jax.jit(lambda t: make_dense_mixer(W)(t))(xs)
+
+        from jax.experimental.shard_map import shard_map
+        def body(blk):
+            perm_f = [((s + 1) % n, s) for s in range(n)]
+            perm_b = [((s - 1) % n, s) for s in range(n)]
+            return (blk + jax.lax.ppermute(blk, "data", perm_f)
+                    + jax.lax.ppermute(blk, "data", perm_b)) / 3.0
+        pp = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("data"),),
+                               out_specs=P("data")))(xs)
+        err = float(jnp.max(jnp.abs(dense - pp)))
+        assert err < 1e-5, err
+        print("OK", err)
+    """))
+    assert "OK" in out
+
+
+def test_depositum_distributed_equals_host():
+    """One DEPOSITUM comm step on an 8-device mesh == single-device result."""
+    out = run_py(textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import (DepositumConfig, init, step,
+                                make_dense_mixer, mixing_matrix)
+
+        n, d = 8, 32
+        key = jax.random.PRNGKey(0)
+        A = jax.random.normal(key, (n, d, d))
+        A = jnp.einsum("nij,nkj->nik", A, A) / d + 0.5 * jnp.eye(d)
+        b = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+        def grad_fn(x, batch):
+            return jnp.einsum("nij,nj->ni", A, x) - b, {}
+        cfg = DepositumConfig(alpha=0.05, beta=1.0, gamma=0.5, comm_period=1,
+                              prox_name="l1", prox_kwargs={"lam": 1e-3})
+        W = mixing_matrix("ring", n)
+        mixer = make_dense_mixer(W)
+
+        st_host = init(jnp.zeros(d), n)
+        for _ in range(5):
+            st_host, _ = step(st_host, None, grad_fn, cfg, mixer,
+                              is_comm_step=True)
+
+        mesh = jax.make_mesh((8,), ("data",))
+        sh = NamedSharding(mesh, P("data"))
+        st = init(jnp.zeros(d), n)
+        st = jax.tree_util.tree_map(
+            lambda v: jax.device_put(v, sh) if v.ndim > 0 else v, st)
+        stepj = jax.jit(lambda s: step(s, None, grad_fn, cfg, mixer,
+                                       is_comm_step=True)[0])
+        for _ in range(5):
+            st = stepj(st)
+        err = max(float(jnp.max(jnp.abs(a - b)))
+                  for a, b in zip(jax.tree_util.tree_leaves(st_host)[:5],
+                                  jax.tree_util.tree_leaves(st)[:5]))
+        assert err < 1e-5, err
+        print("OK", err)
+    """))
+    assert "OK" in out
+
+
+def test_tiny_dryrun_mesh_compiles():
+    """A miniature dry-run (2x4 mesh, reduced arch) exercises the launch
+    path end-to-end inside a subprocess."""
+    out = run_py(textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np
+        from repro.configs import get_config
+        from repro.core import DepositumConfig
+        from repro.launch.sharding import Placement, _RULES_REPLICATED
+        from repro.launch.dryrun import state_specs
+        from repro.launch.specs import train_batch_specs
+        from repro.launch.sharding import tree_shardings
+        from repro.launch.steps import build_train_step
+        from repro.models import build_model
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        placement = Placement(mode="replicated", mesh=mesh,
+                              clients_axes=("data",),
+                              rules=dict(_RULES_REPLICATED))
+        cfg = get_config("qwen3-1.7b", reduced=True)
+        model = build_model(cfg)
+        n = placement.n_clients
+        st_shapes, st_axes = state_specs(model, n)
+        import repro.configs.base as base
+        b_shapes = {
+            "tokens": jax.ShapeDtypeStruct((n, 2, 64), np.int32),
+            "labels": jax.ShapeDtypeStruct((n, 2, 64), np.int32),
+        }
+        b_axes = {"tokens": ("clients", "batch", "seq"),
+                  "labels": ("clients", "batch", "seq")}
+        st_sh = tree_shardings(placement, st_axes, st_shapes)
+        b_sh = tree_shardings(placement, b_axes, b_shapes)
+        dep = DepositumConfig(alpha=1e-3, prox_name="l1",
+                              prox_kwargs={"lam": 1e-6})
+        stepfn = build_train_step(model, dep, n, topology="ring")
+        jitted = jax.jit(stepfn, in_shardings=(st_sh, b_sh),
+                         out_shardings=(st_sh, None))
+        compiled = jitted.lower(st_shapes, b_shapes).compile()
+        print("OK", compiled.cost_analysis()["flops"] > 0)
+    """))
+    assert "OK True" in out

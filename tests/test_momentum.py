@@ -1,0 +1,72 @@
+"""Momentum equivalences (paper Sec. II-C): the aggregated forms (5a)+(5c)
+and (5b)+(5c) equal the direct SHB (3) / SNAG (4) recursions."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.momentum import momentum_update, omega
+
+
+def run_aggregated(kind, gamma, grads, alpha):
+    """x^{t+1} = x^t - alpha nu^{t+1}; nu from momentum_update over raw g."""
+    d = grads[0].shape[0]
+    x = jnp.zeros(d)
+    nu = jnp.zeros(d)
+    mu = jnp.zeros(d)
+    xs = [x]
+    for g in grads:
+        nu, mu = momentum_update(kind, gamma, nu, mu, g)
+        x = x - alpha * nu
+        xs.append(x)
+    return xs
+
+
+@settings(max_examples=20, deadline=None)
+@given(gamma=st.floats(0.0, 0.9), alpha=st.floats(0.01, 0.5),
+       seed=st.integers(0, 100))
+def test_shb_equivalence(gamma, alpha, seed):
+    """(5a)+(5c) == x^{t+1} = x^t - alpha(1-gamma) g^t + gamma (x^t - x^{t-1})."""
+    rng = np.random.default_rng(seed)
+    grads = [jnp.asarray(rng.standard_normal(4), jnp.float32)
+             for _ in range(6)]
+    xs = run_aggregated("polyak", gamma, grads, alpha)
+    # direct SHB recursion (3)
+    x_prev = jnp.zeros(4)
+    x = jnp.zeros(4)
+    for t, g in enumerate(grads):
+        x_new = x - alpha * (1 - gamma) * g + gamma * (x - x_prev)
+        x_prev, x = x, x_new
+        np.testing.assert_allclose(np.asarray(xs[t + 1]), np.asarray(x),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(gamma=st.floats(0.0, 0.9), alpha=st.floats(0.01, 0.5),
+       seed=st.integers(0, 100))
+def test_snag_equivalence(gamma, alpha, seed):
+    """(5b)+(5c) == z^{t+1} = x^t - alpha(1-gamma) g^t ;
+       x^{t+1} = z^{t+1} + gamma (z^{t+1} - z^t)."""
+    rng = np.random.default_rng(seed)
+    grads = [jnp.asarray(rng.standard_normal(4), jnp.float32)
+             for _ in range(6)]
+    xs = run_aggregated("nesterov", gamma, grads, alpha)
+    z_prev = jnp.zeros(4)
+    for t, g in enumerate(grads):
+        z = xs[t] - alpha * (1 - gamma) * g
+        x = z + gamma * (z - z_prev)
+        z_prev = z
+        np.testing.assert_allclose(np.asarray(xs[t + 1]), np.asarray(x),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_gamma_zero_is_vanilla():
+    g = jnp.asarray([1.0, -2.0])
+    nu, mu = momentum_update("polyak", 0.0, jnp.zeros(2), jnp.zeros(2), g)
+    np.testing.assert_array_equal(np.asarray(nu), np.asarray(g))
+    nu, mu = momentum_update("nesterov", 0.0, jnp.zeros(2), jnp.zeros(2), g)
+    np.testing.assert_array_equal(np.asarray(nu), np.asarray(g))
+
+
+def test_omega_matches_paper():
+    assert omega(0.0) == 1.0
+    np.testing.assert_allclose(omega(0.5), (1 + 1.5) / 0.5)

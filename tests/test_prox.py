@@ -1,0 +1,132 @@
+"""Property-based tests for the proximal operators (paper Assumption 1.iii,
+Lemma 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prox import (
+    get_prox,
+    make_l1,
+    make_l2_squared,
+    make_mcp,
+    make_scad,
+    prox_gradient,
+    soft_threshold,
+)
+
+finite_floats = st.floats(-50.0, 50.0, allow_nan=False, allow_infinity=False)
+small_pos = st.floats(0.01, 0.5)
+
+
+@settings(max_examples=100, deadline=None)
+@given(x=finite_floats, lam=st.floats(1e-4, 1.0), alpha=small_pos)
+def test_l1_prox_is_soft_threshold_and_minimizer(x, lam, alpha):
+    """prox_{alpha*lam*|.|}(x) must minimise lam|z| + (1/(2 alpha))(z-x)^2."""
+    prox = make_l1(lam)
+    z = float(prox.prox(jnp.asarray(x), alpha))
+    obj = lambda t: lam * abs(t) + (t - x) ** 2 / (2 * alpha)
+    for dz in (1e-3, -1e-3, 0.1, -0.1):
+        assert obj(z) <= obj(z + dz) + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    x=st.lists(finite_floats, min_size=1, max_size=16),
+    y=st.lists(finite_floats, min_size=1, max_size=16),
+    lam=st.floats(1e-4, 1.0),
+    alpha=small_pos,
+)
+def test_convex_prox_nonexpansive(x, y, lam, alpha):
+    """Lemma 2.iii with rho=0: ||prox(x)-prox(y)|| <= ||x-y||."""
+    n = min(len(x), len(y))
+    xv, yv = jnp.asarray(x[:n]), jnp.asarray(y[:n])
+    prox = make_l1(lam)
+    px, py = prox.prox(xv, alpha), prox.prox(yv, alpha)
+    assert float(jnp.linalg.norm(px - py)) <= float(jnp.linalg.norm(xv - yv)) + 1e-5
+
+
+@settings(max_examples=100, deadline=None)
+@given(x=finite_floats, lam=st.floats(0.01, 1.0), theta=st.floats(2.5, 10.0),
+       alpha=st.floats(0.01, 0.4))
+def test_mcp_prox_minimizes(x, lam, theta, alpha):
+    """MCP prox solves min h(z) + (1/(2 alpha)) (z-x)^2 (weakly convex)."""
+    prox = make_mcp(lam, theta)
+    assert alpha * prox.weak_convexity < 1.0
+    z = float(prox.prox(jnp.asarray(x), alpha))
+
+    def h(t):
+        a = abs(t)
+        return (lam * a - t * t / (2 * theta)) if a <= theta * lam \
+            else 0.5 * theta * lam * lam
+
+    obj = lambda t: h(t) + (t - x) ** 2 / (2 * alpha)
+    grid = np.linspace(x - 3 * theta * lam, x + 3 * theta * lam, 801)
+    best = min(obj(t) for t in grid)
+    assert obj(z) <= best + 1e-4
+
+
+@settings(max_examples=100, deadline=None)
+@given(x=finite_floats, lam=st.floats(0.01, 1.0), theta=st.floats(2.5, 10.0),
+       alpha=st.floats(0.01, 0.4))
+def test_scad_prox_minimizes(x, lam, theta, alpha):
+    prox = make_scad(lam, theta)
+    assert alpha * prox.weak_convexity < 1.0
+    z = float(prox.prox(jnp.asarray(x), alpha))
+
+    def h(t):
+        a = abs(t)
+        if a <= lam:
+            return lam * a
+        if a <= theta * lam:
+            return (2 * theta * lam * a - t * t - lam * lam) / (2 * (theta - 1))
+        return lam * lam * (theta + 1) / 2
+
+    obj = lambda t: h(t) + (t - x) ** 2 / (2 * alpha)
+    grid = np.linspace(x - 3 * theta * lam, x + 3 * theta * lam, 801)
+    best = min(obj(t) for t in grid)
+    assert obj(z) <= best + 1e-4
+
+
+def test_weakly_convex_step_guard():
+    prox = make_mcp(0.1, 4.0)          # rho = 0.25
+    prox.check_step(0.5)               # 0.5 * 0.25 < 1 ok
+    with pytest.raises(ValueError):
+        prox.check_step(5.0)           # 5 * 0.25 >= 1
+
+
+def test_prox_gradient_zero_at_stationarity():
+    """G^alpha(x*) = 0 iff 0 in grad f + partial h (Definition 2)."""
+    lam, alpha = 0.1, 0.2
+    prox = make_l1(lam)
+    # f(x) = 0.5||x - c||^2 ; stationary x* = soft_threshold(c, lam)
+    c = jnp.asarray([2.0, -0.05, 0.0, -3.0])
+    x_star = soft_threshold(c, lam)
+    grad = x_star - c
+    G = prox_gradient(prox, x_star, grad, alpha)
+    np.testing.assert_allclose(np.asarray(G), 0.0, atol=1e-6)
+
+
+def test_l2sq_and_box_and_group():
+    l2 = make_l2_squared(2.0)
+    np.testing.assert_allclose(
+        np.asarray(l2.prox(jnp.asarray([3.0]), 0.5)), [1.5]
+    )
+    box = get_prox("box", radius=1.0)
+    np.testing.assert_allclose(
+        np.asarray(box.prox(jnp.asarray([5.0, -0.2]), 0.3)), [1.0, -0.2]
+    )
+    grp = get_prox("group_l2", lam=1.0)
+    x = jnp.asarray([[3.0, 4.0], [0.1, 0.1]])  # row norms 5, ~0.14
+    out = np.asarray(grp.prox(x, 1.0))
+    np.testing.assert_allclose(out[0], [3.0 * 0.8, 4.0 * 0.8], rtol=1e-5)
+    np.testing.assert_allclose(out[1], [0.0, 0.0], atol=1e-6)
+
+
+def test_prox_pytree():
+    prox = make_l1(0.1)
+    tree = {"a": jnp.asarray([1.0, -0.01]), "b": {"c": jnp.asarray([[0.5]])}}
+    out = prox.prox(tree, 0.5)
+    assert out["a"].shape == (2,) and out["b"]["c"].shape == (1, 1)
+    np.testing.assert_allclose(np.asarray(out["a"]), [0.95, 0.0], atol=1e-6)

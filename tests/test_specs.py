@@ -1,0 +1,79 @@
+"""Input-spec shapes for every (arch x input shape) — pure eval_shape, no
+device allocation, no multi-device mesh needed."""
+import jax
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.launch.specs import (
+    decode_cache_specs,
+    decode_capacity,
+    decode_token_specs,
+    prefill_specs,
+    train_batch_specs,
+)
+
+ARCHS = list_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_specs(arch):
+    cfg = get_config(arch)
+    for n in (1, 16, 32):
+        specs, axes = train_batch_specs(cfg, "train_4k", n)
+        assert set(specs) == set(axes)
+        seq, gb, _ = INPUT_SHAPES["train_4k"]
+        B = max(gb // n, 1)
+        assert specs["tokens"].shape[:2] == (n, B)
+        total_seq = specs["tokens"].shape[2]
+        if cfg.family == "vlm":
+            total_seq += cfg.n_vision_tokens
+            assert specs["vision_embeds"].shape == (n, B, cfg.n_vision_tokens,
+                                                    cfg.d_model)
+        if cfg.family == "encdec":
+            assert specs["frames"].shape[2] == seq  # frames carry the budget
+        else:
+            assert total_seq == seq
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_specs_all_shapes(arch):
+    cfg = get_config(arch)
+    for shape in ("decode_32k", "long_500k"):
+        seq, batch, _ = INPUT_SHAPES[shape]
+        cache_shapes, cache_axes = decode_cache_specs(cfg, shape)
+        tok_shapes, _ = decode_token_specs(cfg, shape)
+        assert tok_shapes["tokens"].shape == (batch, 1)
+        # structure parity between shapes and axes pytrees
+        flat_s = jax.tree_util.tree_leaves(cache_shapes)
+        from repro.models.common import is_axes_leaf
+        flat_a = jax.tree_util.tree_leaves(cache_axes, is_leaf=is_axes_leaf)
+        assert len(flat_s) == len(flat_a)
+        for s, a in zip(flat_s, flat_a):
+            assert len(a) == len(s.shape), (arch, shape, a, s.shape)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_long_context_is_sub_quadratic(arch):
+    """long_500k decode state must NOT scale with the 524288 context."""
+    cfg = get_config(arch)
+    seq, batch, _ = INPUT_SHAPES["long_500k"]
+    cap = decode_capacity(cfg, "long_500k")
+    assert cap <= 8192, (arch, cap)  # window or SSD state, never full seq
+    shapes, _ = decode_cache_specs(cfg, "long_500k")
+    total = sum(s.size for s in jax.tree_util.tree_leaves(shapes))
+    if cfg.family == "encdec":
+        # cross-attention memory legitimately spans the context (O(S d))
+        assert total < 2 * seq * cfg.d_model + 5e8
+    else:
+        # cache is orders of magnitude below quadratic/full-seq KV
+        full_kv = (cfg.n_layers or 1) * 2 * seq * max(cfg.n_kv_heads, 1) * \
+            max(cfg.hd, 64)
+        assert total < full_kv / 10, (arch, total, full_kv)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_specs(arch):
+    cfg = get_config(arch)
+    specs, axes = prefill_specs(cfg, "prefill_32k")
+    assert set(specs) == set(axes)
+    assert all(len(a) == len(specs[k].shape) for k, a in axes.items())

@@ -1,0 +1,54 @@
+"""Mixing matrices must satisfy Assumption 2 for all topologies/sizes."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import (
+    TOPOLOGIES,
+    delta_coefficients,
+    mixing_matrix,
+    spectral_lambda,
+    validate_mixing,
+)
+
+
+@pytest.mark.parametrize("topology", sorted(TOPOLOGIES))
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 10, 16, 25])
+def test_assumption2(topology, n):
+    W = mixing_matrix(topology, n)
+    validate_mixing(W)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(3, 30))
+def test_connectivity_ordering(n):
+    """lambda(complete)=0 <= lambda(torus) <= lambda(ring) < 1."""
+    lc = spectral_lambda(mixing_matrix("complete", n))
+    lr = spectral_lambda(mixing_matrix("ring", n))
+    lt = spectral_lambda(mixing_matrix("torus", n))
+    assert lc < 1e-12
+    assert lt <= lr + 1e-9
+    assert lr < 1.0
+
+
+def test_star_is_symmetric_doubly_stochastic():
+    W = mixing_matrix("star", 10)
+    validate_mixing(W)
+    # hub connects to everyone, leaves only to the hub
+    assert np.count_nonzero(W[0]) == 10
+    assert np.count_nonzero(W[1]) == 2
+
+
+def test_delta_coefficients_complete_graph_larger():
+    """Paper: delta_1, delta_2 are larger when lambda=0 (complete graph)."""
+    T0 = 5
+    for lam in (0.3, 0.7, 0.95):
+        d1c, d2c = delta_coefficients(0.0, 0.0, T0)
+        d1, d2 = delta_coefficients(lam, 0.0, T0)
+        assert d1c > d1 and d2c > d2
+
+
+def test_disconnected_rejected():
+    W = np.eye(4)
+    with pytest.raises(ValueError):
+        validate_mixing(W)
