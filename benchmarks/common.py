@@ -22,9 +22,11 @@ from repro.core import (
     local_then_comm_round,
     make_dense_mixer,
     mixing_matrix,
+    stack_hypers,
     stationarity_metrics,
 )
 from repro.data import make_classification
+from repro.training.sweep import sweep_run
 
 
 # ---------------------------------------------------------------------------
@@ -94,8 +96,16 @@ class ExperimentConfig:
     )
 
 
-def run_depositum(cfg: ExperimentConfig, collect_metrics: bool = True):
-    """Returns dict of curves: loss, accuracy, stationarity terms, wall_s."""
+def run_depositum(cfg: ExperimentConfig, collect_metrics: bool = True,
+                  metrics_every: int | None = None):
+    """Returns dict of curves: loss, accuracy, stationarity terms, wall_s.
+
+    Sequential (one-config) path: a fresh ``jit`` per config with the
+    hyperparameters baked in — the pre-sweep-engine behaviour, kept as the
+    ``--sequential`` fallback and as the wall-clock baseline.
+    ``metrics_every=1`` evaluates metrics every round (matching the sweep
+    engine's per-round metric cadence for fair timing comparisons).
+    """
     ds = make_classification(
         n_samples=cfg.n_samples, n_features=cfg.n_features,
         n_classes=cfg.n_classes, n_clients=cfg.n_clients,
@@ -141,13 +151,13 @@ def run_depositum(cfg: ExperimentConfig, collect_metrics: bool = True):
                                ("round", "loss", "accuracy", "prox_grad_sq",
                                 "consensus_x", "consensus_y", "consensus_nu",
                                 "grad_est_err", "stationarity")}
+    every = metrics_every if metrics_every else max(cfg.rounds // 20, 1)
     t0 = time.perf_counter()
     for r in range(cfg.rounds):
         bx, by = ds.stacked_batches(rng, cfg.batch, dep.comm_period)
         state, _ = rnd(state, batches={"x": jnp.asarray(bx),
                                        "y": jnp.asarray(by)})
-        if collect_metrics and (r % max(cfg.rounds // 20, 1) == 0
-                                or r == cfg.rounds - 1):
+        if collect_metrics and (r % every == 0 or r == cfg.rounds - 1):
             m = metrics_fn(state)
             pbar = jax.tree_util.tree_map(lambda v: jnp.mean(v, 0), state.x)
             logits = apply_fn(pbar, all_x)
@@ -162,3 +172,131 @@ def run_depositum(cfg: ExperimentConfig, collect_metrics: bool = True):
     curves["wall_s"] = time.perf_counter() - t0
     curves["iters"] = cfg.rounds * dep.comm_period
     return curves
+
+
+# ---------------------------------------------------------------------------
+# Sweep-engine path: a whole hyperparameter grid as one compiled program
+# ---------------------------------------------------------------------------
+
+def _static_key(cfg: ExperimentConfig):
+    """Everything that changes the traced program (grouping key)."""
+    d = cfg.depositum
+    return (cfg.model, cfg.n_clients, cfg.topology, cfg.theta, cfg.rounds,
+            cfg.batch, cfg.n_features, cfg.n_classes, cfg.n_samples, cfg.seed,
+            d.momentum, d.comm_period, d.prox_name, d.use_fused_kernel)
+
+
+def _run_sweep_group(cfgs: list[ExperimentConfig], group_id: int,
+                     collect_metrics: bool = True) -> list[dict]:
+    """Run one static-config group (hypers differ) through the sweep engine."""
+    cfg = cfgs[0]
+    dep = cfg.depositum
+    ds = make_classification(
+        n_samples=cfg.n_samples, n_features=cfg.n_features,
+        n_classes=cfg.n_classes, n_clients=cfg.n_clients,
+        theta=cfg.theta, seed=cfg.seed,
+    )
+    init_fn, apply_fn = MODELS[cfg.model]
+    key = jax.random.PRNGKey(cfg.seed)
+    params0 = init_fn(key, cfg.n_features, cfg.n_classes)
+
+    loss_one = functools.partial(ce_loss, apply_fn)
+    grad_one = jax.grad(loss_one)
+
+    def grad_fn(x_stacked, batch):
+        return jax.vmap(grad_one)(x_stacked, batch), {}
+
+    xs_full = jnp.asarray(np.stack([ds.client_arrays(i)[0]
+                                    for i in range(cfg.n_clients)]))
+    ys_full = jnp.asarray(np.stack([ds.client_arrays(i)[1]
+                                    for i in range(cfg.n_clients)]))
+    all_x = xs_full.reshape(-1, cfg.n_features)
+    all_y = ys_full.reshape(-1)
+
+    grad_fns = {
+        "local_at": lambda xst: jax.vmap(grad_one)(
+            xst, {"x": xs_full, "y": ys_full}),
+        "global_at": lambda xst: jax.vmap(
+            lambda p: grad_one(p, {"x": all_x, "y": all_y}))(xst),
+    }
+
+    W = mixing_matrix(cfg.topology, cfg.n_clients)
+    mixer = make_dense_mixer(W)
+    hypers = stack_hypers([c.depositum.hyper() for c in cfgs])
+
+    # pre-sample every round's minibatches with the sequential path's rng
+    # stream, so sweep and sequential runs see identical data
+    rng = np.random.default_rng(cfg.seed + 7)
+    draws = [ds.stacked_batches(rng, cfg.batch, dep.comm_period)
+             for _ in range(cfg.rounds)]
+    batches = {"x": jnp.asarray(np.stack([d[0] for d in draws])),
+               "y": jnp.asarray(np.stack([d[1] for d in draws]))}
+
+    def metrics_fn(state, hyper):
+        m = stationarity_metrics(state, grad_fns, dep, hyper=hyper)
+        pbar = jax.tree_util.tree_map(lambda v: jnp.mean(v, 0), state.x)
+        logits = apply_fn(pbar, all_x)
+        m["accuracy"] = jnp.mean(
+            (jnp.argmax(logits, -1) == all_y).astype(jnp.float32))
+        m["loss"] = loss_one(pbar, {"x": all_x, "y": all_y})
+        return m
+
+    t0 = time.perf_counter()
+    _final, outs = sweep_run(
+        params0, grad_fn, dep, mixer, hypers, batches,
+        n_clients=cfg.n_clients,
+        metrics_fn=metrics_fn if collect_metrics else None,
+    )
+    outs = jax.tree_util.tree_map(np.asarray, outs)  # block + to host
+    wall = time.perf_counter() - t0
+
+    keys = ("loss", "accuracy", "prox_grad_sq", "consensus_x", "consensus_y",
+            "consensus_nu", "grad_est_err", "stationarity")
+    rows = []
+    for s in range(len(cfgs)):
+        curves: dict = {"round": list(range(1, cfg.rounds + 1))}
+        for k in keys:
+            curves[k] = ([float(v) for v in outs[k][s]]
+                         if collect_metrics else [])
+        curves["wall_s"] = wall / len(cfgs)
+        curves["iters"] = cfg.rounds * dep.comm_period
+        curves["sweep_group_id"] = group_id
+        curves["sweep_group_size"] = len(cfgs)
+        curves["sweep_group_wall_s"] = wall
+        rows.append(curves)
+    return rows
+
+
+def run_depositum_grid(cfgs: list[ExperimentConfig],
+                       collect_metrics: bool = True) -> list[dict]:
+    """Run a grid of experiments through the sweep engine.
+
+    Configs are grouped by static structure (model/shape/momentum kind/prox
+    family/T0/...); each group becomes **one** compiled program that vmaps
+    the whole federated run over the group's stacked Hyper axis.  Returns
+    per-config curve dicts in input order, shaped like
+    :func:`run_depositum`'s output.
+    """
+    groups: dict[tuple, list[int]] = {}
+    for i, cfg in enumerate(cfgs):
+        groups.setdefault(_static_key(cfg), []).append(i)
+
+    out: list[dict | None] = [None] * len(cfgs)
+    for gid, idxs in enumerate(groups.values()):
+        rows = _run_sweep_group([cfgs[i] for i in idxs], gid, collect_metrics)
+        for i, row in zip(idxs, rows):
+            out[i] = row
+    return out
+
+
+def grid_wall_s(rows: list[dict]) -> float:
+    """Total wall time of grid rows (counts each sweep group once)."""
+    seen, total = set(), 0.0
+    for r in rows:
+        gid = r.get("sweep_group_id")
+        if gid is None:
+            total += r["wall_s"]
+        elif gid not in seen:
+            seen.add(gid)
+            total += r["sweep_group_wall_s"]
+    return total

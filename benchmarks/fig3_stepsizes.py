@@ -4,28 +4,44 @@ Paper claims to reproduce qualitatively:
   (a) larger alpha*beta -> faster loss / prox-gradient decrease;
   (b) runs sharing the same alpha*beta product align closely in loss;
   (c) consensus errors of x grow with larger steps.
+
+The 5-point (alpha, beta) grid shares one static structure, so the sweep
+engine compiles it as a **single program** (vmap over the stacked Hyper
+axis); ``sequential=True`` falls back to one fresh-jit run per grid point.
 """
 from __future__ import annotations
 
-import dataclasses
-
 from repro.core import DepositumConfig
 
-from benchmarks.common import ExperimentConfig, run_depositum
+from benchmarks.common import (
+    ExperimentConfig,
+    run_depositum,
+    run_depositum_grid,
+)
 
 GRID = [(0.05, 0.5), (0.05, 1.0), (0.1, 0.5), (0.1, 1.0), (0.2, 0.5)]
 
 
-def run(rounds: int = 60):
-    rows = []
-    for alpha, beta in GRID:
-        cfg = ExperimentConfig(
+def configs(rounds: int = 60) -> list[ExperimentConfig]:
+    return [
+        ExperimentConfig(
             model="linear", n_clients=10, topology="ring", rounds=rounds,
             depositum=DepositumConfig(alpha=alpha, beta=beta, gamma=0.5,
                                       comm_period=5, prox_name="l1",
                                       prox_kwargs={"lam": 1e-4}),
         )
-        c = run_depositum(cfg)
+        for alpha, beta in GRID
+    ]
+
+
+def run(rounds: int = 60, sequential: bool = False):
+    cfgs = configs(rounds)
+    if sequential:
+        curves = [run_depositum(c, metrics_every=1) for c in cfgs]
+    else:
+        curves = run_depositum_grid(cfgs)
+    rows = []
+    for (alpha, beta), c in zip(GRID, curves):
         rows.append({
             "alpha": alpha, "beta": beta, "alpha_beta": alpha * beta,
             "final_loss": c["loss"][-1],
@@ -33,6 +49,8 @@ def run(rounds: int = 60):
             "final_consensus_x": c["consensus_x"][-1],
             "final_grad_est_err": c["grad_est_err"][-1],
             "wall_s": c["wall_s"], "iters": c["iters"],
+            "sweep_group_id": c.get("sweep_group_id"),
+            "sweep_group_wall_s": c.get("sweep_group_wall_s"),
             "curves": c,
         })
     return rows

@@ -1,19 +1,27 @@
 """Fig. 4: effect of momentum parameter gamma (OPTION I vs II vs none),
-MLP + MCP on heterogeneous data."""
+MLP + MCP on heterogeneous data.
+
+Momentum *kind* is static structure, so the sweep engine compiles one
+program per kind (none / polyak / nesterov) and vmaps the gamma grid
+inside each — 3 compilations instead of 7.
+"""
 from __future__ import annotations
 
 from repro.core import DepositumConfig
 
-from benchmarks.common import ExperimentConfig, run_depositum
+from benchmarks.common import (
+    ExperimentConfig,
+    run_depositum,
+    run_depositum_grid,
+)
 
 SETTINGS = [("none", 0.0)] + [(m, g) for m in ("polyak", "nesterov")
                               for g in (0.2, 0.5, 0.8)]
 
 
-def run(rounds: int = 50):
-    rows = []
-    for momentum, gamma in SETTINGS:
-        cfg = ExperimentConfig(
+def configs(rounds: int = 50) -> list[ExperimentConfig]:
+    return [
+        ExperimentConfig(
             model="mlp", n_clients=10, topology="ring", theta=1.0,
             n_classes=10, rounds=rounds,
             depositum=DepositumConfig(alpha=0.05, beta=0.5, gamma=gamma,
@@ -22,11 +30,25 @@ def run(rounds: int = 50):
                                       prox_kwargs={"lam": 1e-4,
                                                    "theta": 4.0}),
         )
-        c = run_depositum(cfg)
+        for momentum, gamma in SETTINGS
+    ]
+
+
+def run(rounds: int = 50, sequential: bool = False):
+    cfgs = configs(rounds)
+    if sequential:
+        curves = [run_depositum(c, metrics_every=1) for c in cfgs]
+    else:
+        curves = run_depositum_grid(cfgs)
+    rows = []
+    for (momentum, gamma), c in zip(SETTINGS, curves):
         rows.append({"momentum": momentum, "gamma": gamma,
                      "final_loss": c["loss"][-1],
                      "final_acc": c["accuracy"][-1],
-                     "wall_s": c["wall_s"], "curves": c})
+                     "wall_s": c["wall_s"],
+                     "sweep_group_id": c.get("sweep_group_id"),
+                     "sweep_group_wall_s": c.get("sweep_group_wall_s"),
+                     "curves": c})
     return rows
 
 

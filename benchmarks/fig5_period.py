@@ -1,19 +1,27 @@
 """Fig. 5: effect of communication period T0 — same iteration count, fewer
-communications; consensus error of x grows (jagged) with larger T0."""
+communications; consensus error of x grows (jagged) with larger T0.
+
+T0 changes the scanned program structure (and the round count), so each
+period is its own static group — the grid runner still drives them, keeping
+one code path for every figure.
+"""
 from __future__ import annotations
 
 from repro.core import DepositumConfig
 
-from benchmarks.common import ExperimentConfig, run_depositum
+from benchmarks.common import (
+    ExperimentConfig,
+    run_depositum,
+    run_depositum_grid,
+)
 
 PERIODS = [1, 5, 10, 20]
 TOTAL_ITERS = 400
 
 
-def run():
-    rows = []
-    for T0 in PERIODS:
-        cfg = ExperimentConfig(
+def configs() -> list[ExperimentConfig]:
+    return [
+        ExperimentConfig(
             model="mlp", n_clients=10, topology="ring", theta=1.0,
             n_classes=10, rounds=TOTAL_ITERS // T0,
             depositum=DepositumConfig(alpha=0.05, beta=0.5, gamma=0.5,
@@ -21,12 +29,26 @@ def run():
                                       prox_kwargs={"lam": 1e-4,
                                                    "theta": 4.0}),
         )
-        c = run_depositum(cfg)
+        for T0 in PERIODS
+    ]
+
+
+def run(sequential: bool = False):
+    cfgs = configs()
+    if sequential:
+        curves = [run_depositum(c, metrics_every=1) for c in cfgs]
+    else:
+        curves = run_depositum_grid(cfgs)
+    rows = []
+    for T0, c in zip(PERIODS, curves):
         rows.append({"T0": T0, "communications": TOTAL_ITERS // T0,
                      "final_loss": c["loss"][-1],
                      "final_acc": c["accuracy"][-1],
                      "final_consensus_x": c["consensus_x"][-1],
-                     "wall_s": c["wall_s"], "curves": c})
+                     "wall_s": c["wall_s"],
+                     "sweep_group_id": c.get("sweep_group_id"),
+                     "sweep_group_wall_s": c.get("sweep_group_wall_s"),
+                     "curves": c})
     return rows
 
 

@@ -1,13 +1,22 @@
 """Fig. 7 / Corollary 1: linear speedup — more clients converge faster at
 matched Corollary-1 hyperparameters (alpha ~ sqrt(n), 1-gamma ~ sqrt(n),
-B = sqrt(n))."""
+B = sqrt(n)).
+
+Client count and batch size change array shapes, so each n is its own
+static group; alpha/gamma still ride the Hyper axis through the shared
+grid runner.
+"""
 from __future__ import annotations
 
 import math
 
 from repro.core import DepositumConfig
 
-from benchmarks.common import ExperimentConfig, run_depositum
+from benchmarks.common import (
+    ExperimentConfig,
+    run_depositum,
+    run_depositum_grid,
+)
 
 CLIENTS = [4, 9, 16, 25]
 T = 400
@@ -21,27 +30,42 @@ def corollary1_params(n: int, L: float = 5.0):
     return alpha, gamma, B
 
 
-def run():
-    rows = []
+def configs() -> list[ExperimentConfig]:
+    out = []
     for n in CLIENTS:
         alpha, gamma, B = corollary1_params(n)
         # scale alpha up to a practical level, keeping the sqrt(n) ratio
         alpha *= 40
-        cfg = ExperimentConfig(
+        out.append(ExperimentConfig(
             model="mlp", n_clients=n, topology="ring", theta=1.0,
             n_classes=10, rounds=T // T0, batch=8 * B,
             depositum=DepositumConfig(alpha=alpha, beta=1.0, gamma=gamma,
                                       comm_period=T0, prox_name="mcp",
                                       prox_kwargs={"lam": 1e-4,
                                                    "theta": 4.0}),
-        )
-        c = run_depositum(cfg)
-        rows.append({"n_clients": n, "alpha": round(alpha, 5),
-                     "gamma": round(gamma, 4), "batch": 8 * B,
+        ))
+    return out
+
+
+def run(sequential: bool = False):
+    cfgs = configs()
+    if sequential:
+        curves = [run_depositum(c, metrics_every=1) for c in cfgs]
+    else:
+        curves = run_depositum_grid(cfgs)
+    rows = []
+    for cfg, c in zip(cfgs, curves):
+        rows.append({"n_clients": cfg.n_clients,
+                     "alpha": round(cfg.depositum.alpha, 5),
+                     "gamma": round(cfg.depositum.gamma, 4),
+                     "batch": cfg.batch,
                      "final_loss": c["loss"][-1],
                      "final_acc": c["accuracy"][-1],
                      "final_stationarity": c["stationarity"][-1],
-                     "wall_s": c["wall_s"], "curves": c})
+                     "wall_s": c["wall_s"],
+                     "sweep_group_id": c.get("sweep_group_id"),
+                     "sweep_group_wall_s": c.get("sweep_group_wall_s"),
+                     "curves": c})
     return rows
 
 

@@ -9,6 +9,13 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
+
+# allow `python benchmarks/run.py` from anywhere: repo root + src on sys.path
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 import numpy as np
 
@@ -23,6 +30,9 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="fewer rounds (CI mode)")
     ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--sequential", action="store_true",
+                    help="bypass the sweep engine: one fresh-jit run per "
+                         "grid point (legacy path)")
     ap.add_argument("--out", default="experiments/paper_validation")
     args, _ = ap.parse_known_args()
     os.makedirs(args.out, exist_ok=True)
@@ -43,20 +53,36 @@ def main() -> None:
 
     if wanted("fig3_stepsizes"):
         from benchmarks import fig3_stepsizes as m
-        rows = m.run(rounds=20 if args.quick else 60)
+        from benchmarks.common import grid_wall_s
+        R = 20 if args.quick else 60
+        rows = m.run(rounds=R, sequential=args.sequential)
         us = np.mean([r["wall_s"] / r["iters"] for r in rows]) * 1e6
-        record("fig3_stepsizes", rows, m.check(rows), us)
+        check = m.check(rows)
+        if not args.sequential:
+            # same grid, same data, one fresh jit per point (legacy path)
+            seq_rows = m.run(rounds=R, sequential=True)
+            sweep_wall = grid_wall_s([r["curves"] for r in rows])
+            seq_wall = grid_wall_s([r["curves"] for r in seq_rows])
+            ratio = seq_wall / max(sweep_wall, 1e-9)
+            check["sweep_vs_sequential_speedup"] = round(ratio, 2)
+            lines.append(f"fig3_stepsizes/sweep_vs_sequential,"
+                         f"{sweep_wall * 1e6:.1f},"
+                         f"{ratio:.2f}x (sweep {sweep_wall:.2f}s vs "
+                         f"sequential {seq_wall:.2f}s)")
+            print(lines[-1], flush=True)
+        record("fig3_stepsizes", rows, check, us)
 
     if wanted("fig4_momentum"):
         from benchmarks import fig4_momentum as m
-        rows = m.run(rounds=15 if args.quick else 50)
+        rows = m.run(rounds=15 if args.quick else 50,
+                     sequential=args.sequential)
         us = np.mean([r["curves"]["wall_s"] / r["curves"]["iters"]
                       for r in rows]) * 1e6
         record("fig4_momentum", rows, m.check(rows), us)
 
     if wanted("fig5_period"):
         from benchmarks import fig5_period as m
-        rows = m.run()
+        rows = m.run(sequential=args.sequential)
         us = np.mean([r["curves"]["wall_s"] / r["curves"]["iters"]
                       for r in rows]) * 1e6
         record("fig5_period", rows, m.check(rows), us)
@@ -70,7 +96,7 @@ def main() -> None:
 
     if wanted("fig7_speedup"):
         from benchmarks import fig7_speedup as m
-        rows = m.run()
+        rows = m.run(sequential=args.sequential)
         us = np.mean([r["curves"]["wall_s"] / r["curves"]["iters"]
                       for r in rows]) * 1e6
         record("fig7_speedup", rows, m.check(rows), us)

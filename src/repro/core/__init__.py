@@ -8,7 +8,15 @@ from repro.core.depositum import (  # noqa: F401
     stationarity_metrics,
     consensus_error,
 )
-from repro.core.prox import ProxOperator, get_prox, prox_gradient  # noqa: F401
+from repro.core.hyper import Hyper, hyper_grid, n_sweep, stack_hypers  # noqa: F401
+from repro.core.prox import (  # noqa: F401
+    ProxFamily,
+    ProxOperator,
+    get_family,
+    get_prox,
+    prox_apply,
+    prox_gradient,
+)
 from repro.core.topology import (  # noqa: F401
     mixing_matrix,
     spectral_lambda,

@@ -16,6 +16,15 @@ identity J y^t = beta J g^t for all t).
 The implementation is pytree-generic: ``x`` may be a parameter pytree whose
 leaves have a leading ``n_clients`` dim, so the same code drives a linear
 model and a 314B MoE.
+
+Hyperparameters are split in two (see ``repro.core.hyper``):
+
+* :class:`DepositumConfig` — *static structure*: momentum kind, prox family,
+  T0, fused-kernel flag.  Changing any of these changes the traced program.
+* :class:`Hyper` — *continuous* values (alpha, beta, gamma, lam, theta) as a
+  pytree of jnp scalars, passed as a traced operand so a whole sweep of them
+  shares one compiled program.  Every entry point takes ``hyper=None`` and
+  falls back to the config's float fields, preserving the classic API.
 """
 from __future__ import annotations
 
@@ -24,10 +33,21 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.gossip import Mixer, identity_mixer
+from repro.core.hyper import Hyper
 from repro.core.momentum import MomentumKind, momentum_update
-from repro.core.prox import ProxOperator, get_prox
+from repro.core.prox import (
+    ProxOperator,
+    family_params,
+    get_family,
+    get_prox,
+    host_max,
+    host_min,
+    is_concrete,
+    prox_apply,
+)
 
 PyTree = Any
 
@@ -44,13 +64,50 @@ class DepositumConfig:
     # when True, use a fused Pallas kernel for momentum+prox (TPU path)
     use_fused_kernel: bool = False
 
+    def hyper(self) -> Hyper:
+        """Continuous hyperparameters of this config as a Hyper pytree."""
+        lam, theta = family_params(self.prox_name, self.prox_kwargs)
+        return Hyper.create(alpha=self.alpha, beta=self.beta,
+                            gamma=self.gamma, lam=lam, theta=theta)
+
+    def validate(self, hyper: Hyper | None = None) -> None:
+        """Host-side range checks; traced sweep values are skipped.
+
+        With ``hyper=None`` this checks the config's Python floats only —
+        pure host arithmetic, cheap enough to run every ``step``.  With a
+        concrete (possibly stacked) Hyper it reduces over the sweep axis on
+        the host; call it once at the sweep boundary (``sweep_run`` does).
+        """
+        if self.comm_period < 1:
+            raise ValueError("comm_period (T0) must be >= 1")
+        fam = get_family(self.prox_name)
+        if hyper is None:
+            alpha, gamma = self.alpha, self.gamma
+            lam, theta = family_params(self.prox_name, self.prox_kwargs)
+        else:
+            alpha, gamma = hyper.alpha, hyper.gamma
+            lam, theta = hyper.lam, hyper.theta
+
+        if is_concrete(theta):
+            fam.check_params(lam, theta)
+            if is_concrete(alpha):
+                # elementwise worst point over (possibly stacked) sweep axes;
+                # numpy only: jnp would be staged into tracers under jit
+                rho = np.asarray(fam.rho_fn(np.asarray(theta, np.float32)))
+                worst = float(np.max(np.asarray(alpha, np.float32) * rho))
+                if float(np.max(rho)) > 0.0 and worst >= 1.0:
+                    raise ValueError(
+                        f"prox of weakly convex {self.prox_name} needs "
+                        f"alpha*rho < 1, got max alpha*rho = {worst}"
+                    )
+        if is_concrete(gamma):
+            if not (0.0 <= host_min(gamma) and host_max(gamma) < 1.0):
+                raise ValueError(f"gamma must be in [0,1), got {gamma}")
+
     def make_prox(self) -> ProxOperator:
         prox = get_prox(self.prox_name, **self.prox_kwargs)
         prox.check_step(self.alpha)
-        if not 0.0 <= self.gamma < 1.0:
-            raise ValueError(f"gamma must be in [0,1), got {self.gamma}")
-        if self.comm_period < 1:
-            raise ValueError("comm_period (T0) must be >= 1")
+        self.validate()
         return prox
 
 
@@ -94,6 +151,7 @@ def step(
     mixer: Mixer,
     *,
     is_comm_step: jnp.ndarray | bool | None = None,
+    hyper: Hyper | None = None,
 ) -> tuple[DepositumState, Any]:
     """One DEPOSITUM iteration for all clients.
 
@@ -102,9 +160,23 @@ def step(
     ``(t+1) % T0 == 0``; a Python bool may be passed by loops that unroll
     local/comm phases statically (preferred under scan: no collective inside
     ``lax.cond``).
+
+    ``hyper`` overrides the config's continuous hyperparameters with traced
+    scalars (sweep path); when None they come from the config's floats.
+    Per-step validation covers the config-floats path only (pure host
+    arithmetic, matching the old ``make_prox`` guard); explicit hypers are
+    validated at the sweep boundary (``sweep_run`` / ``local_then_comm_round``)
+    to keep traced/stacked values off the per-step hot path.
     """
-    prox = config.make_prox()
+    if hyper is None:
+        config.validate()
+        hp = config.hyper()
+    else:
+        hp = hyper
     tm = jax.tree_util.tree_map
+    # cast scalars to each leaf's dtype so bf16 params stay bf16 (strong f32
+    # scalars would otherwise promote the scan carry and change its type)
+    c = lambda s, leaf: jnp.asarray(s, leaf.dtype)
 
     fused_ok = (
         config.use_fused_kernel
@@ -119,21 +191,20 @@ def step(
         x_half, nu_next = fused_update_tree(
             state.x, state.y, state.nu,
             kind=config.prox_name,
-            lam=config.prox_kwargs.get("lam", 0.0),
-            theta=config.prox_kwargs.get("theta", 4.0),
-            alpha=config.alpha, gamma=config.gamma,
+            lam=hp.lam, theta=hp.theta, alpha=hp.alpha, gamma=hp.gamma,
         )
         mu_next = state.mu
     else:
         # (1) momentum from the tracking variable
         nu_next, mu_next = momentum_update(
-            config.momentum, config.gamma, state.nu, state.mu, state.y
+            config.momentum, hp.gamma, state.nu, state.mu, state.y
         )
 
         # (2) proximal descent + (optional) gossip
-        x_half = prox.prox(
-            tm(lambda p, v: p - config.alpha * v, state.x, nu_next),
-            config.alpha,
+        x_half = prox_apply(
+            config.prox_name,
+            tm(lambda p, v: p - c(hp.alpha, p) * v, state.x, nu_next),
+            hp.alpha, lam=hp.lam, theta=hp.theta,
         )
 
     if is_comm_step is None:
@@ -153,7 +224,8 @@ def step(
 
     # (4) gradient tracking with step size beta
     y_half = tm(
-        lambda y, gn, go: y + config.beta * (gn - go), state.y, g_next, state.g
+        lambda y, gn, go: y + c(hp.beta, y) * (gn - go),
+        state.y, g_next, state.g,
     )
     if isinstance(is_comm_step, bool):
         y_next = mixer(y_half) if is_comm_step else y_half
@@ -173,6 +245,8 @@ def local_then_comm_round(
     grad_fn: GradFn,
     config: DepositumConfig,
     mixer: Mixer,
+    *,
+    hyper: Hyper | None = None,
 ) -> tuple[DepositumState, Any]:
     """One FL round = (T0-1) collective-free local steps + 1 gossip step.
 
@@ -182,10 +256,13 @@ def local_then_comm_round(
     step applies the real mixer.  This is the production-shaped loop.
     """
     T0 = config.comm_period
+    if hyper is not None:
+        config.validate(hyper)  # once per round; no-op for traced values
 
     def local_body(carry, batch):
         new_state, aux = step(
-            carry, batch, grad_fn, config, identity_mixer, is_comm_step=False
+            carry, batch, grad_fn, config, identity_mixer,
+            is_comm_step=False, hyper=hyper,
         )
         return new_state, aux
 
@@ -194,7 +271,8 @@ def local_then_comm_round(
         state, _ = jax.lax.scan(local_body, state, local_batches)
     last_batch = jax.tree_util.tree_map(lambda b: b[T0 - 1], batches)
     state, aux = step(
-        state, last_batch, grad_fn, config, mixer, is_comm_step=True
+        state, last_batch, grad_fn, config, mixer,
+        is_comm_step=True, hyper=hyper,
     )
     return state, aux
 
@@ -224,6 +302,8 @@ def stationarity_metrics(
     grad_fns: dict,
     config: DepositumConfig,
     L: float = 1.0,
+    *,
+    hyper: Hyper | None = None,
 ) -> dict[str, jnp.ndarray]:
     """Compute the three Definition-3 terms (uses exact grads; eval only).
 
@@ -237,14 +317,17 @@ def stationarity_metrics(
       "local_at":  x_stacked -> ∇f_i evaluated at x_i,
     }
     """
-    prox = config.make_prox()
+    hp = config.hyper() if hyper is None else hyper
+    tm = jax.tree_util.tree_map
     n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
     global_grads = grad_fns["global_at"](state.x)
     local_grads = grad_fns["local_at"](state.x)
 
-    from repro.core.prox import prox_gradient
-
-    G = prox_gradient(prox, state.x, global_grads, config.alpha)
+    # G^alpha(x, grad) = (x - prox_{alpha h}(x - alpha grad)) / alpha
+    shifted = tm(lambda p, g: p - hp.alpha * g, state.x, global_grads)
+    proxed = prox_apply(config.prox_name, shifted, hp.alpha,
+                        lam=hp.lam, theta=hp.theta)
+    G = tm(lambda p, q: (p - q) / hp.alpha, state.x, proxed)
     prox_grad_sq = _sq_norm(G)
 
     cons_x = consensus_error(state.x)

@@ -33,7 +33,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gossip import Mixer, make_dense_mixer
-from repro.core.prox import ProxOperator, get_prox
+from repro.core.hyper import Hyper
+from repro.core.prox import ProxOperator, family_params, get_prox, prox_apply
 
 PyTree = Any
 GradFn = Callable[[PyTree, Any], tuple[PyTree, Any]]
@@ -78,6 +79,14 @@ def _rebroadcast(tree, n):
 
 
 class _Algorithm:
+    """Shared round interface.
+
+    ``round(state, batches, grad_fn, hyper=None)``: when ``hyper`` (a
+    :class:`repro.core.Hyper`) is given, its alpha/lam/theta override the
+    config floats as traced scalars — the same static/traced split DEPOSITUM
+    uses, so baseline grids can ride the sweep engine for fair comparisons.
+    """
+
     def __init__(self, cfg: FedAlgConfig):
         self.cfg = cfg
         self.prox = cfg.make_prox()
@@ -86,30 +95,45 @@ class _Algorithm:
         x = _broadcast(params, n_clients)
         return FedState(x=x, aux1=_zeros(x), aux2=x, t=jnp.zeros((), jnp.int32))
 
-    def _local_sgd(self, x, batches, grad_fn, use_prox: bool, anchor=None, rho=0.0):
+    def _hp(self, hyper: Hyper | None):
+        """(alpha, lam, theta) — config floats or traced overrides."""
+        lam, theta = family_params(self.cfg.prox_name, self.cfg.prox_kwargs)
+        if hyper is None:
+            return self.cfg.alpha, lam, theta
+        return hyper.alpha, hyper.lam, hyper.theta
+
+    def _prox(self, tree, alpha, hyper: Hyper | None):
+        _, lam, theta = self._hp(hyper)
+        return prox_apply(self.cfg.prox_name, tree, alpha, lam=lam,
+                          theta=theta)
+
+    def _local_sgd(self, x, batches, grad_fn, use_prox: bool, anchor=None,
+                   rho=0.0, hyper: Hyper | None = None):
         """T0 (prox-)SGD steps; optional proximal-point anchor (FedDR/ADMM)."""
-        a = self.cfg.alpha
+        a, _, _ = self._hp(hyper)
 
         def body(carry, batch):
             g, _ = grad_fn(carry, batch)
             if rho:
                 g = tm(lambda gg, c, z: gg + rho * (c - z), g, carry, anchor)
-            nxt = tm(lambda c, gg: c - a * gg, carry, g)
+            # cast alpha to the leaf dtype (traced f32 must not promote bf16)
+            nxt = tm(lambda c, gg: c - jnp.asarray(a, c.dtype) * gg, carry, g)
             if use_prox:
-                nxt = self.prox.prox(nxt, a)
+                nxt = self._prox(nxt, a, hyper)
             return nxt, None
 
         x, _ = jax.lax.scan(body, x, batches)
         return x
 
-    def round(self, state, batches, grad_fn):  # pragma: no cover - interface
-        raise NotImplementedError
+    def round(self, state, batches, grad_fn, hyper: Hyper | None = None):
+        raise NotImplementedError  # pragma: no cover - interface
 
 
 class FedMiD(_Algorithm):
-    def round(self, state, batches, grad_fn):
+    def round(self, state, batches, grad_fn, hyper: Hyper | None = None):
         n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
-        x = self._local_sgd(state.x, batches, grad_fn, use_prox=True)
+        x = self._local_sgd(state.x, batches, grad_fn, use_prox=True,
+                            hyper=hyper)
         xbar = _client_mean(x)                     # primal averaging
         x = _rebroadcast(xbar, n)
         return state._replace(x=x, t=state.t + 1), {}
@@ -120,7 +144,7 @@ class FedDR(_Algorithm):
         st = super().init(params, n_clients)
         return st._replace(aux1=st.x)  # y_i = x_i
 
-    def round(self, state, batches, grad_fn):
+    def round(self, state, batches, grad_fn, hyper: Hyper | None = None):
         n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
         eta = self.cfg.eta
         xbar = state.aux2
@@ -128,10 +152,11 @@ class FedDR(_Algorithm):
         y = tm(lambda yy, zb, xi: yy + eta * (zb - xi), state.aux1, xbar, state.x)
         # x_i ~= argmin f_i(x) + 1/(2 eta)||x - y_i||^2  (inexact: SGD w/ anchor)
         x = self._local_sgd(
-            y, batches, grad_fn, use_prox=False, anchor=y, rho=1.0 / eta
+            y, batches, grad_fn, use_prox=False, anchor=y, rho=1.0 / eta,
+            hyper=hyper,
         )
         xhat = tm(lambda xi, yy: 2.0 * xi - yy, x, y)
-        zbar = self.prox.prox(_client_mean(xhat), eta)
+        zbar = self._prox(_client_mean(xhat), eta, hyper)
         return (
             state._replace(x=x, aux1=y, aux2=_rebroadcast(zbar, n), t=state.t + 1),
             {},
@@ -139,18 +164,20 @@ class FedDR(_Algorithm):
 
 
 class FedADMM(_Algorithm):
-    def round(self, state, batches, grad_fn):
+    def round(self, state, batches, grad_fn, hyper: Hyper | None = None):
         n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
         rho = self.cfg.eta
         lam, z = state.aux1, state.aux2
         # local: min f_i(x) + <lam_i, x - z> + rho/2 ||x - z||^2 (inexact)
         shifted_anchor = tm(lambda zz, ll: zz - ll / rho, z, lam)
         x = self._local_sgd(
-            state.x, batches, grad_fn, use_prox=False, anchor=shifted_anchor, rho=rho
+            state.x, batches, grad_fn, use_prox=False, anchor=shifted_anchor,
+            rho=rho, hyper=hyper,
         )
         lam = tm(lambda ll, xi, zz: ll + rho * (xi - zz), lam, x, z)
-        zbar = self.prox.prox(
-            _client_mean(tm(lambda xi, ll: xi + ll / rho, x, lam)), 1.0 / rho
+        zbar = self._prox(
+            _client_mean(tm(lambda xi, ll: xi + ll / rho, x, lam)), 1.0 / rho,
+            hyper,
         )
         return (
             state._replace(x=x, aux1=lam, aux2=_rebroadcast(zbar, n), t=state.t + 1),
@@ -169,8 +196,9 @@ class DSGD(_Algorithm):
             raise ValueError("DSGD needs a mixing matrix W")
         self.mixer: Mixer = make_dense_mixer(cfg.W)
 
-    def round(self, state, batches, grad_fn):
-        x = self._local_sgd(state.x, batches, grad_fn, use_prox=self.use_prox)
+    def round(self, state, batches, grad_fn, hyper: Hyper | None = None):
+        x = self._local_sgd(state.x, batches, grad_fn, use_prox=self.use_prox,
+                            hyper=hyper)
         x = self.mixer(x)
         return state._replace(x=x, t=state.t + 1), {}
 

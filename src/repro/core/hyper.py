@@ -1,0 +1,84 @@
+"""Traceable hyperparameters for DEPOSITUM sweeps.
+
+:class:`DepositumConfig` historically baked step sizes into jitted closures as
+Python floats, so an N-point grid cost N compilations.  The split here keeps
+*structure* static (momentum kind, prox family, T0, topology, fused-kernel
+flag — things that change the program) and moves every *continuous*
+hyperparameter into a :class:`Hyper` pytree of jnp scalars that is threaded
+through ``step``/``local_then_comm_round`` as a traced operand.  Stacking
+Hypers on a leading axis and ``vmap``-ing an entire federated run over it
+turns a whole figure's grid into one compiled program
+(``repro.training.sweep``).
+
+Fields (paper notation):
+  alpha — prox-descent step size
+  beta  — gradient-tracking step size (Remark 1)
+  gamma — momentum coefficient in [0, 1)
+  lam   — regulariser strength (radius for the box family)
+  theta — MCP/SCAD knee parameter (ignored by other families)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Scalar = jnp.ndarray  # 0-d (or sweep-stacked 1-d) float32
+
+
+def _scalar(v) -> Scalar:
+    return jnp.asarray(v, jnp.float32)
+
+
+class Hyper(NamedTuple):
+    """Continuous DEPOSITUM hyperparameters as a traced-friendly pytree."""
+
+    alpha: Scalar
+    beta: Scalar
+    gamma: Scalar
+    lam: Scalar
+    theta: Scalar
+
+    @classmethod
+    def create(cls, alpha=0.05, beta=1.0, gamma=0.8, lam=1e-4,
+               theta=4.0) -> "Hyper":
+        return cls(*map(_scalar, (alpha, beta, gamma, lam, theta)))
+
+    def replace(self, **kw) -> "Hyper":
+        return self._replace(**{k: _scalar(v) for k, v in kw.items()})
+
+
+def stack_hypers(hypers: Sequence[Hyper]) -> Hyper:
+    """Stack a list of Hypers on a new leading sweep axis."""
+    if not hypers:
+        raise ValueError("need at least one Hyper to stack")
+    return jax.tree_util.tree_map(lambda *vs: jnp.stack(vs), *hypers)
+
+
+def hyper_grid(base: "Hyper | None" = None, **axes) -> Hyper:
+    """Cartesian-product grid as a stacked Hyper.
+
+    ``hyper_grid(alpha=[0.05, 0.1], gamma=[0.0, 0.5, 0.8])`` yields a Hyper
+    whose leaves have leading dim 6 (row-major over the given axes).  Fields
+    not named in ``axes`` come from ``base`` — pass your config's
+    ``cfg.hyper()`` to anchor the sweep at its actual values; with no base
+    they take :meth:`Hyper.create` defaults (alpha=0.05, beta=1.0, gamma=0.8,
+    lam=1e-4, theta=4.0), which silently override the config's floats inside
+    ``step`` if they differ.
+    """
+    import itertools
+
+    anchor = Hyper.create() if base is None else base
+    names = list(axes)
+    points = [
+        anchor.replace(**dict(zip(names, combo)))
+        for combo in itertools.product(*(axes[n] for n in names))
+    ]
+    return stack_hypers(points)
+
+
+def n_sweep(hyper: Hyper) -> int:
+    """Sweep-axis length (1 for an unstacked Hyper)."""
+    leaf = hyper.alpha
+    return 1 if jnp.ndim(leaf) == 0 else int(leaf.shape[0])

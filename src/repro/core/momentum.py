@@ -17,21 +17,35 @@ from __future__ import annotations
 from typing import Literal
 
 import jax
+import jax.numpy as jnp
 
 MomentumKind = Literal["polyak", "nesterov", "none"]
 
 
-def momentum_update(kind: MomentumKind, gamma: float, nu, mu, y):
-    """Return (nu_next, mu_next) for pytrees nu, mu, y."""
+def momentum_update(kind: MomentumKind, gamma, nu, mu, y):
+    """Return (nu_next, mu_next) for pytrees nu, mu, y.
+
+    ``gamma`` may be a Python float or a traced jnp scalar (sweep path); the
+    gamma == 0 shortcut is only taken for concrete values — the general
+    formula already reduces to nu^{t+1} = y^t at gamma = 0.
+    """
     tm = jax.tree_util.tree_map
-    if kind == "none" or gamma == 0.0:
+    if kind == "none":
         return y, mu
+    if isinstance(gamma, (int, float)) and gamma == 0.0:
+        return y, mu
+
+    def axpy(a, b):
+        # cast gamma to the leaf dtype: a strong f32 scalar must not promote
+        # bf16 state leaves
+        g = jnp.asarray(gamma, a.dtype)
+        return g * a + (1.0 - g) * b
+
     if kind == "polyak":
-        nu_next = tm(lambda v, yy: gamma * v + (1.0 - gamma) * yy, nu, y)
-        return nu_next, mu
+        return tm(axpy, nu, y), mu
     if kind == "nesterov":
-        mu_next = tm(lambda m, yy: gamma * m + (1.0 - gamma) * yy, mu, y)
-        nu_next = tm(lambda m, yy: gamma * m + (1.0 - gamma) * yy, mu_next, y)
+        mu_next = tm(axpy, mu, y)
+        nu_next = tm(axpy, mu_next, y)
         return nu_next, mu_next
     raise ValueError(f"unknown momentum kind {kind!r}")
 

@@ -7,184 +7,296 @@ the quadratic coefficient ``tau = 1/alpha`` where ``alpha`` is the step size,
 i.e. the update is ``prox_h^{alpha^{-1}}{x - alpha * nu}`` which equals the
 textbook ``prox_{alpha h}(x - alpha nu)``.
 
-Every regulariser is a :class:`ProxOperator` with
-  value(x)          -> scalar h(x) summed over the pytree/array
-  prox(x, alpha)    -> elementwise prox of ``alpha * h`` at x
-  weak_convexity    -> rho  (0 for convex h)
+Two layers:
+
+* :class:`ProxFamily` — the *parametric* form: ``prox_fn(x, alpha, lam,
+  theta)`` and ``value_fn(x, lam, theta)`` where alpha/lam/theta may be traced
+  jnp scalars.  This is what the sweep engine vmaps over, so a whole
+  hyperparameter grid shares one compiled program.
+* :class:`ProxOperator` — the classic bound form (``make_l1(lam)`` etc.) used
+  by the baselines and tests; it closes over (possibly traced) parameters and
+  delegates to the family.
 
 All maps are elementwise (separable), matching the paper's examples
 (l1, MCP, SCAD, indicator).  ``alpha`` is the *step size* (so the quadratic
-coefficient is 1/alpha); validity requires ``alpha * rho < 1``.
+coefficient is 1/alpha); validity requires ``alpha * rho < 1``.  Range checks
+(``theta`` domains, ``alpha * rho < 1``) are host-side and run only when the
+value is concrete at trace time — traced sweep axes skip them.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
-@dataclasses.dataclass(frozen=True)
-class ProxOperator:
-    """A separable regulariser h with its proximal map."""
+def is_concrete(v) -> bool:
+    """True when ``v`` is a host value we may branch/raise on at trace time."""
+    return not isinstance(v, jax.core.Tracer)
 
-    name: str
-    value_fn: Callable[[jnp.ndarray], jnp.ndarray]
-    prox_fn: Callable[[jnp.ndarray, float], jnp.ndarray]
-    weak_convexity: float = 0.0  # rho in the paper
 
-    def value(self, x) -> jnp.ndarray:
-        leaves = jax.tree_util.tree_leaves(x)
-        return sum(jnp.sum(self.value_fn(leaf)) for leaf in leaves)
+def host_min(v) -> float:
+    """min of a concrete scalar/array using numpy only — jnp ops would be
+    staged into tracers under jit (omnistaging), breaking host-side checks."""
+    return float(v) if isinstance(v, (int, float)) else float(np.min(np.asarray(v)))
 
-    def prox(self, x, alpha: float):
-        """prox_{alpha h}(x), applied leafwise over a pytree."""
-        return jax.tree_util.tree_map(lambda leaf: self.prox_fn(leaf, alpha), x)
 
-    def check_step(self, alpha: float) -> None:
-        if self.weak_convexity > 0.0 and not alpha * self.weak_convexity < 1.0:
-            raise ValueError(
-                f"prox of {self.weak_convexity}-weakly convex {self.name} needs "
-                f"alpha*rho < 1, got alpha={alpha}"
-            )
+def host_max(v) -> float:
+    return float(v) if isinstance(v, (int, float)) else float(np.max(np.asarray(v)))
 
 
 # ---------------------------------------------------------------------------
-# Convex regularisers
+# Parametric families (traced-scalar friendly)
 # ---------------------------------------------------------------------------
 
 def soft_threshold(x, thr):
     return jnp.sign(x) * jnp.maximum(jnp.abs(x) - thr, 0.0)
 
 
-def make_l1(lam: float) -> ProxOperator:
-    """h(x) = lam * ||x||_1 ; prox = soft thresholding."""
-    return ProxOperator(
-        name=f"l1({lam})",
-        value_fn=lambda x: lam * jnp.abs(x),
-        prox_fn=lambda x, alpha: soft_threshold(x, alpha * lam),
-        weak_convexity=0.0,
-    )
+@dataclasses.dataclass(frozen=True)
+class ProxFamily:
+    """A separable regulariser family h(.; lam, theta).
+
+    ``prox_fn(x, alpha, lam, theta)`` and ``value_fn(x, lam, theta)`` accept
+    Python floats or traced jnp scalars interchangeably.  ``rho_fn(theta)``
+    returns the weak-convexity modulus (may be traced if theta is).
+    ``check_params(lam, theta)`` raises on concrete out-of-domain parameters
+    and is a no-op for traced ones.
+    """
+
+    name: str
+    value_fn: Callable
+    prox_fn: Callable
+    rho_fn: Callable = lambda theta: 0.0
+    check_params: Callable = lambda lam, theta: None
+
+    def prox(self, tree, alpha, lam, theta):
+        # compute with the scalars' (f32) precision, return the leaf's dtype:
+        # strong f32 hyperparameters must not promote bf16 parameters
+        return jax.tree_util.tree_map(
+            lambda leaf: self.prox_fn(leaf, alpha, lam, theta).astype(leaf.dtype),
+            tree,
+        )
+
+    def value(self, tree, lam, theta) -> jnp.ndarray:
+        leaves = jax.tree_util.tree_leaves(tree)
+        return sum(jnp.sum(self.value_fn(leaf, lam, theta)) for leaf in leaves)
 
 
-def make_l2_squared(lam: float) -> ProxOperator:
-    """h(x) = lam/2 * ||x||^2 ; prox = shrinkage x / (1 + alpha lam)."""
-    return ProxOperator(
-        name=f"l2sq({lam})",
-        value_fn=lambda x: 0.5 * lam * jnp.square(x),
-        prox_fn=lambda x, alpha: x / (1.0 + alpha * lam),
-        weak_convexity=0.0,
-    )
+def _l1_value(x, lam, theta):
+    return lam * jnp.abs(x)
 
 
-def make_box_indicator(radius: float) -> ProxOperator:
-    """h = indicator of the box [-radius, radius]^d ; prox = projection."""
-
-    def value_fn(x):
-        # 0 inside, +inf outside; for metrics report 0 (feasible iterates).
-        return jnp.zeros_like(x)
-
-    return ProxOperator(
-        name=f"box({radius})",
-        value_fn=value_fn,
-        prox_fn=lambda x, alpha: jnp.clip(x, -radius, radius),
-        weak_convexity=0.0,
-    )
+def _l1_prox(x, alpha, lam, theta):
+    return soft_threshold(x, alpha * lam)
 
 
-def make_group_l2(lam: float) -> ProxOperator:
-    """Row-group lasso: h(X) = lam * sum_rows ||X_row||_2 (block soft thr)."""
-
-    def value_fn(x):
-        if x.ndim < 2:
-            return lam * jnp.abs(x)
-        norms = jnp.linalg.norm(x.reshape(x.shape[0], -1), axis=-1)
-        return lam * norms
-
-    def prox_fn(x, alpha):
-        if x.ndim < 2:
-            return soft_threshold(x, alpha * lam)
-        flat = x.reshape(x.shape[0], -1)
-        norms = jnp.linalg.norm(flat, axis=-1, keepdims=True)
-        scale = jnp.maximum(1.0 - alpha * lam / jnp.maximum(norms, 1e-12), 0.0)
-        return (flat * scale).reshape(x.shape)
-
-    return ProxOperator(f"group_l2({lam})", value_fn, prox_fn, 0.0)
+def _l2sq_value(x, lam, theta):
+    return 0.5 * lam * jnp.square(x)
 
 
-# ---------------------------------------------------------------------------
-# Weakly convex regularisers (MCP, SCAD) — paper's nonconvex examples
-# ---------------------------------------------------------------------------
+def _l2sq_prox(x, alpha, lam, theta):
+    return x / (1.0 + alpha * lam)
 
-def make_mcp(lam: float, theta: float) -> ProxOperator:
-    """Minimax Concave Penalty.
 
-    h(t) = lam|t| - t^2/(2 theta)          for |t| <= theta lam
-         = theta lam^2 / 2                 for |t| >  theta lam
-    rho-weakly convex with rho = 1/theta.  Prox (for alpha/theta < 1):
+def _box_value(x, lam, theta):
+    # 0 inside, +inf outside; for metrics report 0 (feasible iterates).
+    return jnp.zeros_like(x)
+
+
+def _box_prox(x, alpha, lam, theta):
+    # ``lam`` plays the radius role for the box family.
+    return jnp.clip(x, -lam, lam)
+
+
+def _group_l2_value(x, lam, theta):
+    if x.ndim < 2:
+        return lam * jnp.abs(x)
+    norms = jnp.linalg.norm(x.reshape(x.shape[0], -1), axis=-1)
+    return lam * norms
+
+
+def _group_l2_prox(x, alpha, lam, theta):
+    if x.ndim < 2:
+        return soft_threshold(x, alpha * lam)
+    flat = x.reshape(x.shape[0], -1)
+    norms = jnp.linalg.norm(flat, axis=-1, keepdims=True)
+    scale = jnp.maximum(1.0 - alpha * lam / jnp.maximum(norms, 1e-12), 0.0)
+    return (flat * scale).reshape(x.shape)
+
+
+def _mcp_value(x, lam, theta):
+    a = jnp.abs(x)
+    inner = lam * a - jnp.square(x) / (2.0 * theta)
+    outer = 0.5 * theta * lam * lam
+    return jnp.where(a <= theta * lam, inner, outer)
+
+
+def _mcp_prox(x, alpha, lam, theta):
+    """Firm thresholding (requires theta > alpha):
         |x| <= alpha lam            -> 0
         alpha lam < |x| <= theta lam-> (x - alpha lam sign(x)) / (1 - alpha/theta)
         |x| > theta lam             -> x
-    (standard firm-thresholding; requires theta > alpha).
     """
-    if theta <= 0:
-        raise ValueError("MCP needs theta > 0")
-
-    def value_fn(x):
-        a = jnp.abs(x)
-        inner = lam * a - jnp.square(x) / (2.0 * theta)
-        outer = 0.5 * theta * lam * lam
-        return jnp.where(a <= theta * lam, inner, outer)
-
-    def prox_fn(x, alpha):
-        a = jnp.abs(x)
-        shrunk = soft_threshold(x, alpha * lam) / (1.0 - alpha / theta)
-        out = jnp.where(a <= theta * lam, shrunk, x)
-        return jnp.where(a <= alpha * lam, jnp.zeros_like(x), out)
-
-    return ProxOperator(f"mcp({lam},{theta})", value_fn, prox_fn, 1.0 / theta)
+    a = jnp.abs(x)
+    shrunk = soft_threshold(x, alpha * lam) / (1.0 - alpha / theta)
+    out = jnp.where(a <= theta * lam, shrunk, x)
+    return jnp.where(a <= alpha * lam, jnp.zeros_like(x), out)
 
 
-def make_scad(lam: float, theta: float) -> ProxOperator:
-    """Smoothly Clipped Absolute Deviation (theta > 2).
+def _scad_value(x, lam, theta):
+    a = jnp.abs(x)
+    r1 = lam * a
+    r2 = (2.0 * theta * lam * a - jnp.square(x) - lam * lam) / (2.0 * (theta - 1.0))
+    r3 = jnp.full_like(x, 1.0) * (lam * lam * (theta + 1.0) / 2.0)
+    return jnp.where(a <= lam, r1, jnp.where(a <= theta * lam, r2, r3))
 
-    h(t) = lam|t|                                        |t| <= lam
-         = (2 theta lam |t| - t^2 - lam^2)/(2(theta-1))  lam < |t| <= theta lam
-         = lam^2 (theta+1)/2                             |t| > theta lam
-    rho = 1/(theta-1) weakly convex.  Prox (alpha rho < 1):
+
+def _scad_prox(x, alpha, lam, theta):
+    """SCAD prox (alpha rho < 1):
         |x| <= (1+alpha) lam      -> soft(x, alpha lam)
         (1+alpha) lam < |x| <= theta lam
                                   -> ((theta-1) x - sign(x) theta lam alpha)
                                      / (theta - 1 - alpha)
         |x| > theta lam           -> x
     """
-    if theta <= 2:
+    a = jnp.abs(x)
+    r1 = soft_threshold(x, alpha * lam)
+    r2 = ((theta - 1.0) * x - jnp.sign(x) * theta * lam * alpha) / (
+        theta - 1.0 - alpha
+    )
+    return jnp.where(a <= (1.0 + alpha) * lam, r1,
+                     jnp.where(a <= theta * lam, r2, x))
+
+
+def _check_mcp(lam, theta):
+    # ``theta`` may be scalar or a stacked sweep axis; check the worst point
+    if is_concrete(theta) and host_min(theta) <= 0:
+        raise ValueError("MCP needs theta > 0")
+
+
+def _check_scad(lam, theta):
+    if is_concrete(theta) and host_min(theta) <= 2:
         raise ValueError("SCAD needs theta > 2")
 
-    def value_fn(x):
-        a = jnp.abs(x)
-        r1 = lam * a
-        r2 = (2.0 * theta * lam * a - jnp.square(x) - lam * lam) / (2.0 * (theta - 1.0))
-        r3 = jnp.full_like(x, lam * lam * (theta + 1.0) / 2.0)
-        return jnp.where(a <= lam, r1, jnp.where(a <= theta * lam, r2, r3))
 
-    def prox_fn(x, alpha):
-        a = jnp.abs(x)
-        r1 = soft_threshold(x, alpha * lam)
-        r2 = ((theta - 1.0) * x - jnp.sign(x) * theta * lam * alpha) / (
-            theta - 1.0 - alpha
+FAMILIES: dict[str, ProxFamily] = {
+    "l1": ProxFamily("l1", _l1_value, _l1_prox),
+    "l2sq": ProxFamily("l2sq", _l2sq_value, _l2sq_prox),
+    "box": ProxFamily("box", _box_value, _box_prox),
+    "group_l2": ProxFamily("group_l2", _group_l2_value, _group_l2_prox),
+    "mcp": ProxFamily("mcp", _mcp_value, _mcp_prox,
+                      rho_fn=lambda theta: 1.0 / theta,
+                      check_params=_check_mcp),
+    "scad": ProxFamily("scad", _scad_value, _scad_prox,
+                       rho_fn=lambda theta: 1.0 / (theta - 1.0),
+                       check_params=_check_scad),
+    "zero": ProxFamily("zero",
+                       lambda x, lam, theta: jnp.zeros_like(x),
+                       lambda x, alpha, lam, theta: x),
+}
+
+
+def get_family(name: str) -> ProxFamily:
+    if name not in FAMILIES:
+        raise KeyError(f"unknown regulariser {name!r}; have {sorted(FAMILIES)}")
+    return FAMILIES[name]
+
+
+def prox_apply(name: str, tree, alpha, lam=0.0, theta=4.0):
+    """``prox_{alpha h(.; lam, theta)}`` leafwise; all scalars may be traced."""
+    return get_family(name).prox(tree, alpha, lam, theta)
+
+
+def family_params(name: str, kwargs: dict) -> tuple:
+    """Map a prox_kwargs dict to the family's (lam, theta) slots."""
+    if name == "box":
+        return kwargs.get("radius", 1.0), 4.0
+    return kwargs.get("lam", 0.0), kwargs.get("theta", 4.0)
+
+
+# ---------------------------------------------------------------------------
+# Bound operators (classic API; parameters may be traced)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ProxOperator:
+    """A separable regulariser h with its proximal map (parameters bound)."""
+
+    name: str
+    value_fn: Callable[[jnp.ndarray], jnp.ndarray]
+    prox_fn: Callable[[jnp.ndarray, float], jnp.ndarray]
+    weak_convexity: float = 0.0  # rho in the paper (traced if theta is)
+
+    def value(self, x) -> jnp.ndarray:
+        leaves = jax.tree_util.tree_leaves(x)
+        return sum(jnp.sum(self.value_fn(leaf)) for leaf in leaves)
+
+    def prox(self, x, alpha):
+        """prox_{alpha h}(x), applied leafwise over a pytree."""
+        return jax.tree_util.tree_map(
+            lambda leaf: self.prox_fn(leaf, alpha).astype(leaf.dtype), x
         )
-        out = jnp.where(a <= (1.0 + alpha) * lam, r1, jnp.where(a <= theta * lam, r2, x))
-        return out
 
-    return ProxOperator(f"scad({lam},{theta})", value_fn, prox_fn, 1.0 / (theta - 1.0))
+    def check_step(self, alpha) -> None:
+        """Host-side guard alpha * rho < 1; skipped for traced values."""
+        if not (is_concrete(alpha) and is_concrete(self.weak_convexity)):
+            return
+        rho = float(self.weak_convexity)
+        if rho > 0.0 and not float(alpha) * rho < 1.0:
+            raise ValueError(
+                f"prox of {rho}-weakly convex {self.name} needs "
+                f"alpha*rho < 1, got alpha={alpha}"
+            )
+
+
+def _bind(name: str, lam=0.0, theta=4.0, label: str | None = None) -> ProxOperator:
+    fam = get_family(name)
+    fam.check_params(lam, theta)
+    return ProxOperator(
+        name=label if label is not None else name,
+        value_fn=lambda x: fam.value_fn(x, lam, theta),
+        prox_fn=lambda x, alpha: fam.prox_fn(x, alpha, lam, theta),
+        weak_convexity=fam.rho_fn(theta),
+    )
+
+
+def make_l1(lam) -> ProxOperator:
+    """h(x) = lam * ||x||_1 ; prox = soft thresholding."""
+    return _bind("l1", lam, label=f"l1({lam})")
+
+
+def make_l2_squared(lam) -> ProxOperator:
+    """h(x) = lam/2 * ||x||^2 ; prox = shrinkage x / (1 + alpha lam)."""
+    return _bind("l2sq", lam, label=f"l2sq({lam})")
+
+
+def make_box_indicator(radius) -> ProxOperator:
+    """h = indicator of the box [-radius, radius]^d ; prox = projection."""
+    return _bind("box", radius, label=f"box({radius})")
+
+
+def make_group_l2(lam) -> ProxOperator:
+    """Row-group lasso: h(X) = lam * sum_rows ||X_row||_2 (block soft thr)."""
+    return _bind("group_l2", lam, label=f"group_l2({lam})")
+
+
+def make_mcp(lam, theta) -> ProxOperator:
+    """Minimax Concave Penalty; rho = 1/theta weakly convex."""
+    return _bind("mcp", lam, theta, label=f"mcp({lam},{theta})")
+
+
+def make_scad(lam, theta) -> ProxOperator:
+    """Smoothly Clipped Absolute Deviation (theta > 2); rho = 1/(theta-1)."""
+    return _bind("scad", lam, theta, label=f"scad({lam},{theta})")
 
 
 def make_zero() -> ProxOperator:
     """h = 0 (smooth problem); prox is the identity."""
-    return ProxOperator("zero", lambda x: jnp.zeros_like(x), lambda x, alpha: x, 0.0)
+    return _bind("zero", label="zero")
 
 
 REGISTRY: dict[str, Callable[..., ProxOperator]] = {
@@ -208,7 +320,7 @@ def get_prox(name: str, **kwargs) -> ProxOperator:
 # Proximal gradient mapping (paper Definition 2)
 # ---------------------------------------------------------------------------
 
-def prox_gradient(prox: ProxOperator, x, grad, alpha: float):
+def prox_gradient(prox: ProxOperator, x, grad, alpha):
     """G^alpha(x, nu) = (x - prox_{alpha h}(x - alpha nu)) / alpha  (pytree)."""
     shifted = jax.tree_util.tree_map(lambda p, g: p - alpha * g, x, grad)
     proxed = prox.prox(shifted, alpha)

@@ -5,6 +5,12 @@ streamed from HBM.  On TPU the fused kernel turns ~7 HBM sweeps of the
 unfused update (momentum axpy, shift, prox select chain) into 1 read of
 {x, y, nu} + 1 write of {x', nu'}.
 
+Hyperparameters (lam, theta, alpha, gamma) are **runtime scalars**: they are
+packed into a tiny SMEM params block rather than baked in as compile-time
+constants, so one compiled kernel serves every point of a hyperparameter
+sweep (and composes with ``jax.vmap`` over stacked configs).  Only the prox
+``kind`` selects code and stays static.
+
 Validated on CPU with ``interpret=True`` against ``ref.py``.
 """
 from __future__ import annotations
@@ -14,6 +20,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+try:  # SMEM lives in the TPU extension; fall back gracefully off-TPU
+    from jax.experimental.pallas import tpu as pltpu
+
+    _SMEM = pltpu.SMEM
+except Exception:  # pragma: no cover - pallas without TPU support
+    _SMEM = None
 
 # (sublane, lane)-aligned tile; 8x128 is the fp32 VREG tile, use a multiple
 BLOCK_ROWS = 256
@@ -34,6 +47,15 @@ def _pad_to_2d(x, rows: int, cols: int):
     return flat.reshape(-1, cols), n
 
 
+def _params_block(*scalars):
+    """(1, k) fp32 SMEM payload of runtime hyperparameters."""
+    return jnp.stack([jnp.asarray(s, jnp.float32).reshape(()) for s in scalars])[None, :]
+
+
+def _scalar_spec():
+    return pl.BlockSpec(memory_space=_SMEM)
+
+
 # ---------------------------------------------------------------------------
 # prox kernels (l1 / mcp / scad), elementwise on a 2-D tile
 # ---------------------------------------------------------------------------
@@ -42,7 +64,7 @@ def _soft(x, thr):
     return jnp.sign(x) * jnp.maximum(jnp.abs(x) - thr, 0.0)
 
 
-def _prox_block(x, kind: str, lam: float, theta: float, alpha: float):
+def _prox_block(x, kind: str, lam, theta, alpha):
     if kind == "l1":
         return _soft(x, alpha * lam)
     if kind == "mcp":
@@ -61,27 +83,31 @@ def _prox_block(x, kind: str, lam: float, theta: float, alpha: float):
     raise ValueError(kind)
 
 
-def _prox_kernel(x_ref, o_ref, *, kind, lam, theta, alpha):
+def _prox_kernel(p_ref, x_ref, o_ref, *, kind):
+    lam, theta, alpha = p_ref[0, 0], p_ref[0, 1], p_ref[0, 2]
     x = x_ref[...].astype(jnp.float32)
     o_ref[...] = _prox_block(x, kind, lam, theta, alpha).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("kind", "lam", "theta", "alpha"))
-def prox_pallas(x, *, kind: str = "l1", lam: float = 1e-4,
-                theta: float = 4.0, alpha: float = 0.1):
-    """prox_{alpha*h}(x) for separable h; any shape/dtype; tiled VMEM pass."""
+@functools.partial(jax.jit, static_argnames=("kind",))
+def prox_pallas(x, *, kind: str = "l1", lam=1e-4, theta=4.0, alpha=0.1):
+    """prox_{alpha*h}(x) for separable h; any shape/dtype; tiled VMEM pass.
+
+    ``lam``/``theta``/``alpha`` may be Python floats or traced jnp scalars;
+    either way they ride in SMEM and do not trigger recompilation.
+    """
     x2, n = _pad_to_2d(x, BLOCK_ROWS, BLOCK_COLS)
     rows = x2.shape[0]
     grid = (rows // BLOCK_ROWS,)
     out = pl.pallas_call(
-        functools.partial(_prox_kernel, kind=kind, lam=lam, theta=theta,
-                          alpha=alpha),
+        functools.partial(_prox_kernel, kind=kind),
         grid=grid,
-        in_specs=[pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0))],
+        in_specs=[_scalar_spec(),
+                  pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
         interpret=_should_interpret(),
-    )(x2)
+    )(_params_block(lam, theta, alpha), x2)
     return out.reshape(-1)[:n].reshape(x.shape)
 
 
@@ -90,8 +116,9 @@ def prox_pallas(x, *, kind: str = "l1", lam: float = 1e-4,
 # x' = prox_{alpha h}(x - alpha nu')
 # ---------------------------------------------------------------------------
 
-def _fused_kernel(x_ref, y_ref, nu_ref, xo_ref, nuo_ref, *,
-                  kind, lam, theta, alpha, gamma):
+def _fused_kernel(p_ref, x_ref, y_ref, nu_ref, xo_ref, nuo_ref, *, kind):
+    lam, theta = p_ref[0, 0], p_ref[0, 1]
+    alpha, gamma = p_ref[0, 2], p_ref[0, 3]
     x = x_ref[...].astype(jnp.float32)
     y = y_ref[...].astype(jnp.float32)
     nu = nu_ref[...].astype(jnp.float32)
@@ -101,13 +128,13 @@ def _fused_kernel(x_ref, y_ref, nu_ref, xo_ref, nuo_ref, *,
     nuo_ref[...] = nu_next.astype(nuo_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("kind", "lam", "theta", "alpha", "gamma")
-)
-def fused_update_pallas(x, y, nu, *, kind: str = "l1", lam: float = 1e-4,
-                        theta: float = 4.0, alpha: float = 0.1,
-                        gamma: float = 0.8):
-    """Fused momentum+prox (one VMEM pass).  Returns (x', nu')."""
+@functools.partial(jax.jit, static_argnames=("kind",))
+def fused_update_pallas(x, y, nu, *, kind: str = "l1", lam=1e-4,
+                        theta=4.0, alpha=0.1, gamma=0.8):
+    """Fused momentum+prox (one VMEM pass).  Returns (x', nu').
+
+    Hyperparameters are runtime SMEM scalars — sweep-safe, recompile-free.
+    """
     assert x.shape == y.shape == nu.shape
     x2, n = _pad_to_2d(x, BLOCK_ROWS, BLOCK_COLS)
     y2, _ = _pad_to_2d(y, BLOCK_ROWS, BLOCK_COLS)
@@ -116,16 +143,15 @@ def fused_update_pallas(x, y, nu, *, kind: str = "l1", lam: float = 1e-4,
     grid = (rows // BLOCK_ROWS,)
     bs = pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0))
     xo, nuo = pl.pallas_call(
-        functools.partial(_fused_kernel, kind=kind, lam=lam, theta=theta,
-                          alpha=alpha, gamma=gamma),
+        functools.partial(_fused_kernel, kind=kind),
         grid=grid,
-        in_specs=[bs, bs, bs],
+        in_specs=[_scalar_spec(), bs, bs, bs],
         out_specs=[bs, bs],
         out_shape=[
             jax.ShapeDtypeStruct(x2.shape, x.dtype),
             jax.ShapeDtypeStruct(x2.shape, nu.dtype),
         ],
         interpret=_should_interpret(),
-    )(x2, y2, nu2)
+    )(_params_block(lam, theta, alpha, gamma), x2, y2, nu2)
     unpad = lambda o, ref: o.reshape(-1)[:n].reshape(ref.shape)
     return unpad(xo, x), unpad(nuo, nu)

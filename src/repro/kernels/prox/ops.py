@@ -1,4 +1,9 @@
-"""Jit'd public wrappers for the prox kernels (pytree-aware)."""
+"""Jit'd public wrappers for the prox kernels (pytree-aware).
+
+All hyperparameters (``lam``/``theta``/``alpha``/``gamma``) may be Python
+floats **or traced jnp scalars** — they are forwarded to the kernels as
+runtime SMEM operands, so sweeping them never recompiles.
+"""
 from __future__ import annotations
 
 import jax
@@ -6,7 +11,7 @@ import jax
 from repro.kernels.prox.kernel import fused_update_pallas, prox_pallas
 
 
-def prox_tree(tree, *, kind: str, lam: float, alpha: float, theta: float = 4.0):
+def prox_tree(tree, *, kind: str, lam, alpha, theta=4.0):
     """Apply the Pallas prox leafwise over a parameter pytree."""
     return jax.tree_util.tree_map(
         lambda leaf: prox_pallas(leaf, kind=kind, lam=lam, theta=theta,
@@ -15,8 +20,8 @@ def prox_tree(tree, *, kind: str, lam: float, alpha: float, theta: float = 4.0):
     )
 
 
-def fused_update_tree(x_tree, y_tree, nu_tree, *, kind: str, lam: float,
-                      alpha: float, gamma: float, theta: float = 4.0):
+def fused_update_tree(x_tree, y_tree, nu_tree, *, kind: str, lam,
+                      alpha, gamma, theta=4.0):
     """Fused DEPOSITUM local update over pytrees.  Returns (x', nu')."""
     flat_x, treedef = jax.tree_util.tree_flatten(x_tree)
     flat_y = treedef.flatten_up_to(y_tree)

@@ -1,2 +1,11 @@
 from repro.training.train_loop import FederatedTrainer, TrainerConfig  # noqa: F401
 from repro.training.checkpoint import save_checkpoint, restore_checkpoint  # noqa: F401
+from repro.training.sweep import (  # noqa: F401
+    broadcast_batches,
+    make_sweep_round,
+    stack_rounds,
+    sweep_batch_iter,
+    sweep_init,
+    sweep_run,
+    sweep_run_sequential,
+)

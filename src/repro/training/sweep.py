@@ -1,0 +1,194 @@
+"""Batched hyperparameter-sweep engine: vmap whole DEPOSITUM runs over configs.
+
+The paper's experimental section (Figs. 3-7) is a grid study over step sizes
+alpha/beta, momentum gamma, regulariser strength lam, ...  Historically each
+grid point was a separate Python-loop run with a fresh ``jit`` because the
+hyperparameters were baked into closures.  With the Hyper/static split
+(``repro.core.hyper``) they are traced operands, so an entire federated run
+can be ``vmap``-ed over a stacked Hyper axis: the S-point grid becomes **one
+compiled program** — one ``lax.scan`` over rounds, vmapped over the sweep
+axis, composed with the per-client ``vmap`` inside ``grad_fn``.
+
+Shapes:
+  hypers        Hyper with leaves (S,)
+  batches       leaves (rounds, T0, n_clients, B, ...)   shared across sweep
+                or (S, rounds, T0, n_clients, B, ...)    per-config data
+  final state   leaves (S, n_clients, ...)
+  round outputs leaves (S, rounds, ...)
+
+Static structure (momentum kind, prox family, T0, topology/mixer,
+use_fused_kernel) lives in the single ``DepositumConfig`` shared by the whole
+sweep; grids that vary static fields are grouped by the caller (see
+``benchmarks/common.py:run_depositum_grid``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DepositumConfig,
+    DepositumState,
+    Hyper,
+    init as dep_init,
+    local_then_comm_round,
+    n_sweep,
+)
+from repro.core.gossip import Mixer
+
+PyTree = Any
+GradFn = Callable[[PyTree, Any], tuple[PyTree, Any]]
+MetricsFn = Callable[[DepositumState, Hyper], dict]
+
+
+# ---------------------------------------------------------------------------
+# Data adapters: broadcast one data stream across the sweep axis
+# ---------------------------------------------------------------------------
+
+def broadcast_batches(batches: PyTree, n: int) -> PyTree:
+    """Add a leading sweep dim of length ``n`` to every leaf (no copy: a
+    broadcast view is materialised lazily by XLA)."""
+    return jax.tree_util.tree_map(
+        lambda b: jnp.broadcast_to(b[None], (n,) + b.shape), batches
+    )
+
+
+def sweep_batch_iter(base_iter: Iterator[PyTree], n: int) -> Iterator[PyTree]:
+    """Adapter for streaming loops: yields each batch with a sweep dim."""
+    for batches in base_iter:
+        yield broadcast_batches(batches, n)
+
+
+def stack_rounds(batch_list: Iterable[PyTree]) -> PyTree:
+    """Stack per-round batch pytrees into one (rounds, ...) pytree."""
+    batch_list = list(batch_list)
+    return jax.tree_util.tree_map(lambda *bs: jnp.stack(bs), *batch_list)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+def make_sweep_round(
+    grad_fn: GradFn,
+    config: DepositumConfig,
+    mixer: Mixer,
+    *,
+    batch_axis: Optional[int] = 0,
+) -> Callable:
+    """jit(vmap) of one federated round over the sweep axis.
+
+    Returns ``round_fn(states, hypers, batches) -> (states, aux)`` where
+    ``states`` leaves carry a leading sweep dim.  Use this for streaming
+    loops that cannot pre-stack all rounds of data.
+
+    The default ``batch_axis=0`` matches :func:`broadcast_batches` /
+    :func:`sweep_batch_iter`, whose outputs carry a leading (S,) sweep dim;
+    pass ``batch_axis=None`` only when feeding raw (T0, n_clients, ...)
+    batches shared across the sweep.
+    """
+    def one(state, hyper, batches):
+        return local_then_comm_round(
+            state, batches, grad_fn, config, mixer, hyper=hyper
+        )
+
+    return jax.jit(jax.vmap(one, in_axes=(0, 0, batch_axis)))
+
+
+def _scanned_run(params0, grad_fn, config, mixer, n_clients, metrics_fn):
+    """One config's whole run as a scan over rounds: (hyper, batches) ->
+    (final_state, per_round_outputs).  Shared by the vmapped and the serial
+    paths so their computations cannot drift apart."""
+    state0 = dep_init(params0, n_clients)
+
+    def run_one(hyper, batches):
+        def body(state, batches_r):
+            state, _ = local_then_comm_round(
+                state, batches_r, grad_fn, config, mixer, hyper=hyper
+            )
+            out = metrics_fn(state, hyper) if metrics_fn is not None else {}
+            return state, out
+
+        return jax.lax.scan(body, state0, batches)
+
+    return run_one
+
+
+def sweep_init(params0: PyTree, n_clients: int, n: int) -> DepositumState:
+    """Initial sweep state: identical per-config, leaves (S, n_clients, ...)."""
+    state0 = dep_init(params0, n_clients)
+    return jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), state0
+    )
+
+
+def sweep_run(
+    params0: PyTree,
+    grad_fn: GradFn,
+    config: DepositumConfig,
+    mixer: Mixer,
+    hypers: Hyper,
+    batches: PyTree,
+    *,
+    n_clients: int,
+    metrics_fn: Optional[MetricsFn] = None,
+    batch_axis: Optional[int] = None,
+) -> tuple[DepositumState, dict]:
+    """Run ``rounds`` federated rounds for every hyperparameter point at once.
+
+    ``batches`` leaves: (rounds, T0, n_clients, B, ...) — shared across the
+    sweep (``batch_axis=None``, the common fair-comparison case) or with an
+    extra leading (S,) dim (``batch_axis=0``).  Returns the stacked final
+    state and a dict of per-round outputs with leaves (S, rounds, ...)
+    (empty if ``metrics_fn`` is None).
+
+    The whole thing is one jitted program: scan over rounds inside, vmap over
+    the sweep axis outside, client vmap innermost (inside ``grad_fn``).
+    """
+    config.validate(hypers)  # host-side range checks on the concrete grid
+    run_one = _scanned_run(params0, grad_fn, config, mixer, n_clients,
+                           metrics_fn)
+    runner = jax.jit(jax.vmap(run_one, in_axes=(0, batch_axis)))
+    final_states, outs = runner(hypers, batches)
+    return final_states, outs
+
+
+def sweep_run_sequential(
+    params0: PyTree,
+    grad_fn: GradFn,
+    config: DepositumConfig,
+    mixer: Mixer,
+    hypers: Hyper,
+    batches: PyTree,
+    *,
+    n_clients: int,
+    metrics_fn: Optional[MetricsFn] = None,
+    batch_axis: Optional[int] = None,
+) -> tuple[DepositumState, dict]:
+    """Reference path: same computation, one config at a time (python loop).
+
+    Used by the equivalence tests and the sweep-vs-sequential wall-clock
+    ratio.  Each point still runs the scanned round function, but configs are
+    processed serially and results re-stacked on the sweep axis.
+    """
+    S = n_sweep(hypers)
+    config.validate(hypers)
+    # the *same* scanned program as sweep_run — only the batching differs —
+    # so the equivalence the tests assert is between vmap and a serial loop,
+    # never between two drifting copies of the round logic
+    run_one = jax.jit(_scanned_run(params0, grad_fn, config, mixer,
+                                   n_clients, metrics_fn))
+
+    results = []
+    for s in range(S):
+        hyper_s = jax.tree_util.tree_map(lambda v: v[s], hypers)
+        batches_s = batches if batch_axis is None else (
+            jax.tree_util.tree_map(lambda b: b[s], batches))
+        results.append(run_one(hyper_s, batches_s))
+    final = jax.tree_util.tree_map(lambda *vs: jnp.stack(vs),
+                                   *[r[0] for r in results])
+    outs = jax.tree_util.tree_map(lambda *vs: jnp.stack(vs),
+                                  *[r[1] for r in results]) if results[0][1] else {}
+    return final, outs

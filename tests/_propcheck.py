@@ -1,0 +1,120 @@
+"""Tiny vendored fallback for ``hypothesis`` used when it is not installed.
+
+The tier-1 suite only uses a small surface: ``@settings(max_examples=...,
+deadline=...)``, ``@given(**strategies)`` and the strategies ``floats``,
+``integers``, ``lists``, ``booleans`` and ``sampled_from``.  This module
+re-implements exactly that over seeded ``numpy.random`` draws so the suite
+collects and runs everywhere; when the real hypothesis is available it is
+preferred (see conftest.py).
+
+Draws are deterministic per test function (seeded from the qualified name),
+and each strategy mixes a few boundary values into the stream so the shim
+keeps some of hypothesis's edge-case bias.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    """A draw rule: ``draw(rng, i)`` returns the i-th example."""
+
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self._boundary = tuple(boundary)
+
+    def draw(self, rng: np.random.Generator, i: int):
+        if i < len(self._boundary):
+            return self._boundary[i]
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+               allow_infinity=False, **_kw):
+        lo, hi = float(min_value), float(max_value)
+
+        def draw(rng):
+            return float(rng.uniform(lo, hi))
+
+        mid = lo + 0.5 * (hi - lo)
+        return _Strategy(draw, boundary=(lo, hi, mid))
+
+    @staticmethod
+    def integers(min_value=0, max_value=100, **_kw):
+        lo, hi = int(min_value), int(max_value)
+
+        def draw(rng):
+            return int(rng.integers(lo, hi + 1))
+
+        return _Strategy(draw, boundary=(lo, hi))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size=0, max_size=10, **_kw):
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements._draw(rng) for _ in range(size)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def booleans(**_kw):
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)),
+                         boundary=(False, True))
+
+    @staticmethod
+    def sampled_from(options, **_kw):
+        seq = list(options)
+        return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))],
+                         boundary=tuple(seq[: min(len(seq), 3)]))
+
+
+strategies = _Strategies()
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Decorator recording max_examples on the (already-)wrapped test."""
+
+    def deco(fn):
+        fn._propcheck_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**named_strategies):
+    """Decorator: run the test over deterministic seeded draws.
+
+    Works in either decorator order relative to ``@settings`` because the
+    example count is read from an attribute at call time.
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(wrapper, "_propcheck_max_examples",
+                        getattr(fn, "_propcheck_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            seed = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = np.random.default_rng((seed, i))
+                kwargs = {name: s.draw(rng, i)
+                          for name, s in named_strategies.items()}
+                try:
+                    fn(**kwargs)
+                except BaseException:
+                    print(f"propcheck falsifying example ({fn.__qualname__}, "
+                          f"draw {i}): {kwargs}")
+                    raise
+
+        # pytest must not treat the strategy names as fixtures
+        wrapper.__signature__ = __import__("inspect").Signature()
+        return wrapper
+
+    return deco

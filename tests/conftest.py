@@ -1,4 +1,5 @@
 import os
+import sys
 
 # keep tests single-device (the dry-run sets its own flag in a subprocess)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
@@ -6,3 +7,21 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+# Property-based tests use hypothesis when available; otherwise install the
+# vendored numpy-backed shim under the same import name so all test modules
+# collect unmodified (tests/_propcheck.py).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _propcheck
+
+    sys.modules["hypothesis"] = _propcheck
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running system/distributed tests "
+        "(deselect with -m 'not slow')"
+    )

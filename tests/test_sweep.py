@@ -1,0 +1,224 @@
+"""Sweep engine: a vmapped hyperparameter sweep must equal per-config
+sequential runs leaf-for-leaf, and the Hyper operand path must equal the
+classic config-floats path (tentpole equivalence guarantees)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DepositumConfig,
+    Hyper,
+    hyper_grid,
+    init as dep_init,
+    local_then_comm_round,
+    make_dense_mixer,
+    mixing_matrix,
+    n_sweep,
+    stack_hypers,
+    stationarity_metrics,
+)
+from repro.training.sweep import (
+    broadcast_batches,
+    make_sweep_round,
+    stack_rounds,
+    sweep_init,
+    sweep_run,
+    sweep_run_sequential,
+)
+
+N, D, T0, ROUNDS = 6, 12, 3, 8
+
+
+def linear_problem(seed=0):
+    """Least-squares clients: f_i(w) = 0.5||A_i w - b_i||^2 / m."""
+    key = jax.random.PRNGKey(seed)
+    A = jax.random.normal(key, (N, 16, D))
+    w_true = jax.random.normal(jax.random.fold_in(key, 1), (D,))
+    b = jnp.einsum("nmd,d->nm", A, w_true)
+    b = b + 0.1 * jax.random.normal(jax.random.fold_in(key, 2), b.shape)
+
+    def grad_fn(w_stacked, batch):
+        # full-batch per-client gradients (deterministic => exact equality)
+        r = jnp.einsum("nmd,nd->nm", A, w_stacked) - b
+        return jnp.einsum("nmd,nm->nd", A, r) / A.shape[1], {}
+
+    return grad_fn
+
+
+def _grid_points(prox_name):
+    lam0 = 1e-3
+    return [
+        dict(alpha=0.05, beta=1.0, gamma=0.5, lam=lam0),
+        dict(alpha=0.1, beta=0.5, gamma=0.2, lam=5e-3),
+        dict(alpha=0.02, beta=1.5, gamma=0.8, lam=1e-4),
+    ]
+
+
+@pytest.mark.parametrize("momentum", ["polyak", "nesterov"])
+@pytest.mark.parametrize("prox_name", ["l1", "mcp"])
+def test_sweep_matches_sequential(momentum, prox_name):
+    grad_fn = linear_problem()
+    cfg = DepositumConfig(momentum=momentum, comm_period=T0,
+                          prox_name=prox_name,
+                          prox_kwargs={"lam": 1e-3, "theta": 4.0}
+                          if prox_name == "mcp" else {"lam": 1e-3})
+    mixer = make_dense_mixer(mixing_matrix("ring", N))
+    hypers = stack_hypers([Hyper.create(**p, theta=4.0)
+                           for p in _grid_points(prox_name)])
+    batches = jnp.zeros((ROUNDS, T0, 1))
+
+    def metrics_fn(state, hyper):
+        return {"xsq": jnp.sum(state.x ** 2), "t": state.t}
+
+    fs, outs = sweep_run(jnp.zeros(D), grad_fn, cfg, mixer, hypers, batches,
+                         n_clients=N, metrics_fn=metrics_fn)
+    fseq, outseq = sweep_run_sequential(jnp.zeros(D), grad_fn, cfg, mixer,
+                                        hypers, batches, n_clients=N,
+                                        metrics_fn=metrics_fn)
+    for name in ("x", "y", "nu", "mu", "g"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(fs, name)), np.asarray(getattr(fseq, name)),
+            rtol=2e-5, atol=1e-6, err_msg=f"leaf {name}")
+    np.testing.assert_allclose(np.asarray(outs["xsq"]),
+                               np.asarray(outseq["xsq"]), rtol=2e-5,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("momentum", ["polyak", "nesterov"])
+@pytest.mark.parametrize("prox_name", ["l1", "mcp"])
+def test_sweep_matches_classic_config_floats(momentum, prox_name):
+    """Each sweep row == the pre-refactor path (floats baked into closures)."""
+    grad_fn = linear_problem()
+    mixer = make_dense_mixer(mixing_matrix("ring", N))
+    points = _grid_points(prox_name)
+    cfg0 = DepositumConfig(momentum=momentum, comm_period=T0,
+                           prox_name=prox_name,
+                           prox_kwargs={"lam": 1e-3, "theta": 4.0}
+                           if prox_name == "mcp" else {"lam": 1e-3})
+    hypers = stack_hypers([Hyper.create(**p, theta=4.0) for p in points])
+    batches = jnp.zeros((ROUNDS, T0, 1))
+    fs, _ = sweep_run(jnp.zeros(D), grad_fn, cfg0, mixer, hypers, batches,
+                      n_clients=N)
+
+    for s, p in enumerate(points):
+        kwargs = {"lam": p["lam"]}
+        if prox_name == "mcp":
+            kwargs["theta"] = 4.0
+        cfg = DepositumConfig(alpha=p["alpha"], beta=p["beta"],
+                              gamma=p["gamma"], momentum=momentum,
+                              comm_period=T0, prox_name=prox_name,
+                              prox_kwargs=kwargs)
+        state = dep_init(jnp.zeros(D), N)
+        rnd = jax.jit(functools.partial(local_then_comm_round,
+                                        grad_fn=grad_fn, config=cfg,
+                                        mixer=mixer))
+        for _ in range(ROUNDS):
+            state, _ = rnd(state, batches=jnp.zeros((T0, 1)))
+        np.testing.assert_allclose(np.asarray(fs.x[s]), np.asarray(state.x),
+                                   rtol=2e-5, atol=1e-6)
+
+
+def test_fused_kernel_sweep_matches_reference_sweep():
+    """use_fused_kernel under the sweep vmap == unfused sweep (Polyak/l1)."""
+    grad_fn = linear_problem()
+    mixer = make_dense_mixer(mixing_matrix("ring", N))
+    hypers = hyper_grid(alpha=[0.02, 0.1], lam=[1e-4, 5e-3])
+    hypers = hypers.replace(gamma=jnp.full_like(hypers.alpha, 0.6))
+    batches = jnp.zeros((ROUNDS, T0, 1))
+    out = {}
+    for fused in (False, True):
+        cfg = DepositumConfig(momentum="polyak", comm_period=T0,
+                              prox_name="l1", prox_kwargs={"lam": 1e-4},
+                              use_fused_kernel=fused)
+        fs, _ = sweep_run(jnp.zeros(D), grad_fn, cfg, mixer, hypers, batches,
+                          n_clients=N)
+        out[fused] = fs
+    for name in ("x", "y", "nu", "g"):
+        np.testing.assert_allclose(np.asarray(getattr(out[False], name)),
+                                   np.asarray(getattr(out[True], name)),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_streaming_round_and_batch_adapters():
+    """make_sweep_round + broadcast_batches: streaming sweep loop works and
+    the sweep dim broadcasts data without divergence across configs that
+    share a hyper point."""
+    grad_fn = linear_problem()
+    cfg = DepositumConfig(momentum="polyak", comm_period=T0, prox_name="l1",
+                          prox_kwargs={"lam": 1e-3})
+    mixer = make_dense_mixer(mixing_matrix("ring", N))
+    h = Hyper.create(alpha=0.05, beta=1.0, gamma=0.5, lam=1e-3)
+    hypers = stack_hypers([h, h])  # identical points must stay identical
+    assert n_sweep(hypers) == 2
+
+    states = sweep_init(jnp.zeros(D), N, 2)
+    round_fn = make_sweep_round(grad_fn, cfg, mixer, batch_axis=0)
+    for _ in range(4):
+        b = broadcast_batches(jnp.zeros((T0, 1)), 2)
+        states, _ = round_fn(states, hypers, b)
+    np.testing.assert_allclose(np.asarray(states.x[0]),
+                               np.asarray(states.x[1]), rtol=0, atol=0)
+    assert int(states.t[0]) == 4 * T0
+
+
+@pytest.mark.parametrize("alg", ["fedmid", "dsgd"])
+def test_baseline_grid_vmaps_over_hyper(alg):
+    """FCO baselines accept the same traced Hyper override, so their grids
+    can ride one compiled program too (fair Table-III comparisons)."""
+    from repro.core import mixing_matrix as mixmat
+    from repro.core.fedopt import FedAlgConfig, make_algorithm
+
+    grad_fn = linear_problem()
+    cfg = FedAlgConfig(alpha=0.1, local_steps=T0, prox_name="l1",
+                       prox_kwargs={"lam": 1e-3}, W=mixmat("ring", N))
+    a = make_algorithm(alg, cfg)
+    state0 = a.init(jnp.zeros(D), N)
+    alphas = [0.02, 0.1, 0.3]
+    hypers = stack_hypers([Hyper.create(alpha=al, lam=1e-3)
+                           for al in alphas])
+    batches = jnp.zeros((T0, 1))
+
+    @jax.jit
+    def swept(hypers):
+        def one(hyper):
+            st, _ = a.round(state0, batches, grad_fn, hyper=hyper)
+            st, _ = a.round(st, batches, grad_fn, hyper=hyper)
+            return st.x
+        return jax.vmap(one)(hypers)
+
+    got = swept(hypers)
+    for s, al in enumerate(alphas):
+        cfg_s = FedAlgConfig(alpha=al, local_steps=T0, prox_name="l1",
+                             prox_kwargs={"lam": 1e-3}, W=mixmat("ring", N))
+        a_s = make_algorithm(alg, cfg_s)
+        st, _ = a_s.round(a_s.init(jnp.zeros(D), N), batches, grad_fn)
+        st, _ = a_s.round(st, batches, grad_fn)
+        np.testing.assert_allclose(np.asarray(got[s]), np.asarray(st.x),
+                                   rtol=2e-5, atol=1e-6)
+
+
+def test_stack_rounds_and_metrics_shapes():
+    grad_fn = linear_problem()
+    cfg = DepositumConfig(momentum="polyak", comm_period=T0, prox_name="l1",
+                          prox_kwargs={"lam": 1e-3})
+    mixer = make_dense_mixer(mixing_matrix("ring", N))
+    # base= anchors unswept fields (lam here) at the config's actual values
+    hypers = hyper_grid(base=cfg.hyper(), alpha=[0.02, 0.05, 0.1])
+    assert abs(float(hypers.lam[0]) - 1e-3) < 1e-9
+    batches = stack_rounds([jnp.zeros((T0, 1)) for _ in range(ROUNDS)])
+    assert batches.shape == (ROUNDS, T0, 1)
+
+    grad_fns = {"local_at": lambda x: grad_fn(x, None)[0],
+                "global_at": lambda x: grad_fn(x, None)[0]}
+
+    def metrics_fn(state, hyper):
+        return stationarity_metrics(state, grad_fns, cfg, hyper=hyper)
+
+    fs, outs = sweep_run(jnp.zeros(D), grad_fn, cfg, mixer, hypers, batches,
+                         n_clients=N, metrics_fn=metrics_fn)
+    assert fs.x.shape == (3, N, D)
+    assert outs["stationarity"].shape == (3, ROUNDS)
+    assert np.all(np.isfinite(np.asarray(outs["stationarity"])))

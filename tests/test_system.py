@@ -3,6 +3,7 @@ trained consensus model serves coherently; checkpoints round-trip."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.core import DepositumConfig
@@ -15,6 +16,9 @@ from repro.training.train_loop import (
     TrainerConfig,
     lm_batch_iterator,
 )
+
+# end-to-end LM training runs: minutes, not seconds
+pytestmark = pytest.mark.slow
 
 
 def test_federated_lm_training_reduces_loss(tmp_path):
