@@ -18,14 +18,19 @@ import numpy as np
 
 from repro.core import (
     DepositumConfig,
+    MixPlan,
     init as dep_init,
     local_then_comm_round,
     make_dense_mixer,
     mixing_matrix,
+    plan_spectral_lambda,
+    spectral_lambda,
     stack_hypers,
+    stack_mixplans,
     stationarity_metrics,
 )
 from repro.data import make_classification
+from repro.training.backends import ExecutionBackend
 from repro.training.sweep import sweep_run
 
 
@@ -171,6 +176,7 @@ def run_depositum(cfg: ExperimentConfig, collect_metrics: bool = True,
                 curves[k].append(float(m[k]))
     curves["wall_s"] = time.perf_counter() - t0
     curves["iters"] = cfg.rounds * dep.comm_period
+    curves["spectral_lambda"] = float(spectral_lambda(W))
     return curves
 
 
@@ -179,16 +185,27 @@ def run_depositum(cfg: ExperimentConfig, collect_metrics: bool = True,
 # ---------------------------------------------------------------------------
 
 def _static_key(cfg: ExperimentConfig):
-    """Everything that changes the traced program (grouping key)."""
+    """Everything that changes the traced program (grouping key).
+
+    Topology is deliberately NOT part of the key: mixing is a traced
+    ``MixPlan`` operand (dense W), so configs differing only in their graph
+    stack on the same sweep axis as configs differing in step sizes.
+    """
     d = cfg.depositum
-    return (cfg.model, cfg.n_clients, cfg.topology, cfg.theta, cfg.rounds,
+    return (cfg.model, cfg.n_clients, cfg.theta, cfg.rounds,
             cfg.batch, cfg.n_features, cfg.n_classes, cfg.n_samples, cfg.seed,
             d.momentum, d.comm_period, d.prox_name, d.use_fused_kernel)
 
 
 def _run_sweep_group(cfgs: list[ExperimentConfig], group_id: int,
-                     collect_metrics: bool = True) -> list[dict]:
-    """Run one static-config group (hypers differ) through the sweep engine."""
+                     collect_metrics: bool = True,
+                     backend: ExecutionBackend | None = None) -> list[dict]:
+    """Run one static-config group through the sweep engine.
+
+    Configs may differ in hyperparameters AND topology: both are traced
+    operands (stacked Hyper axis + stacked dense-W MixPlan axis), so the
+    group still compiles to one program.
+    """
     cfg = cfgs[0]
     dep = cfg.depositum
     ds = make_classification(
@@ -220,8 +237,12 @@ def _run_sweep_group(cfgs: list[ExperimentConfig], group_id: int,
             lambda p: grad_one(p, {"x": all_x, "y": all_y}))(xst),
     }
 
-    W = mixing_matrix(cfg.topology, cfg.n_clients)
-    mixer = make_dense_mixer(W)
+    plans = [MixPlan.from_topology(c.topology, c.n_clients) for c in cfgs]
+    if len({c.topology for c in cfgs}) == 1:
+        plan = plans[0]          # shared graph: broadcast, no stacked W
+    else:
+        plan = stack_mixplans(plans)  # topology sweep axis: W is (S, n, n)
+    lambdas = plan_spectral_lambda(plan, cfg.n_clients)
     hypers = stack_hypers([c.depositum.hyper() for c in cfgs])
 
     # pre-sample every round's minibatches with the sequential path's rng
@@ -243,9 +264,10 @@ def _run_sweep_group(cfgs: list[ExperimentConfig], group_id: int,
 
     t0 = time.perf_counter()
     _final, outs = sweep_run(
-        params0, grad_fn, dep, mixer, hypers, batches,
+        params0, grad_fn, dep, plan, hypers, batches,
         n_clients=cfg.n_clients,
         metrics_fn=metrics_fn if collect_metrics else None,
+        backend=backend,
     )
     outs = jax.tree_util.tree_map(np.asarray, outs)  # block + to host
     wall = time.perf_counter() - t0
@@ -260,6 +282,8 @@ def _run_sweep_group(cfgs: list[ExperimentConfig], group_id: int,
                          if collect_metrics else [])
         curves["wall_s"] = wall / len(cfgs)
         curves["iters"] = cfg.rounds * dep.comm_period
+        curves["spectral_lambda"] = float(np.atleast_1d(lambdas)[
+            s if plan.is_stacked else 0])
         curves["sweep_group_id"] = group_id
         curves["sweep_group_size"] = len(cfgs)
         curves["sweep_group_wall_s"] = wall
@@ -268,14 +292,18 @@ def _run_sweep_group(cfgs: list[ExperimentConfig], group_id: int,
 
 
 def run_depositum_grid(cfgs: list[ExperimentConfig],
-                       collect_metrics: bool = True) -> list[dict]:
+                       collect_metrics: bool = True,
+                       backend: ExecutionBackend | None = None) -> list[dict]:
     """Run a grid of experiments through the sweep engine.
 
     Configs are grouped by static structure (model/shape/momentum kind/prox
     family/T0/...); each group becomes **one** compiled program that vmaps
-    the whole federated run over the group's stacked Hyper axis.  Returns
-    per-config curve dicts in input order, shaped like
-    :func:`run_depositum`'s output.
+    the whole federated run over the group's stacked Hyper axis — and, since
+    mixing is a MixPlan operand, over a stacked dense-W topology axis too
+    (topology is not a grouping key).  Per-row ``spectral_lambda`` reports
+    each point's lambda = ||W - J||.  Returns per-config curve dicts in
+    input order, shaped like :func:`run_depositum`'s output.  ``backend``
+    selects where sweep points execute (default stacked-vmap).
     """
     groups: dict[tuple, list[int]] = {}
     for i, cfg in enumerate(cfgs):
@@ -283,7 +311,8 @@ def run_depositum_grid(cfgs: list[ExperimentConfig],
 
     out: list[dict | None] = [None] * len(cfgs)
     for gid, idxs in enumerate(groups.values()):
-        rows = _run_sweep_group([cfgs[i] for i in idxs], gid, collect_metrics)
+        rows = _run_sweep_group([cfgs[i] for i in idxs], gid, collect_metrics,
+                                backend=backend)
         for i, row in zip(idxs, rows):
             out[i] = row
     return out

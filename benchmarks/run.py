@@ -39,6 +39,7 @@ def main() -> None:
 
     lines = ["name,us_per_call,derived"]
     results = {}
+    bench_sweep = {"quick": bool(args.quick)}
 
     def wanted(name):
         return args.only is None or name in args.only
@@ -65,6 +66,13 @@ def main() -> None:
             seq_wall = grid_wall_s([r["curves"] for r in seq_rows])
             ratio = seq_wall / max(sweep_wall, 1e-9)
             check["sweep_vs_sequential_speedup"] = round(ratio, 2)
+            bench_sweep["fig3_stepsizes"] = {
+                "grid": "hyperparameters (alpha, beta)",
+                "grid_points": len(rows), "rounds": R,
+                "sweep_wall_s": round(sweep_wall, 3),
+                "sequential_wall_s": round(seq_wall, 3),
+                "speedup": round(ratio, 3),
+            }
             lines.append(f"fig3_stepsizes/sweep_vs_sequential,"
                          f"{sweep_wall * 1e6:.1f},"
                          f"{ratio:.2f}x (sweep {sweep_wall:.2f}s vs "
@@ -89,10 +97,36 @@ def main() -> None:
 
     if wanted("fig6_topology"):
         from benchmarks import fig6_topology as m
-        rows = m.run(rounds=15 if args.quick else 40)
+        from benchmarks.common import grid_wall_s
+        R6 = 15 if args.quick else 40
+        rows = m.run(rounds=R6, sequential=args.sequential)
         us = np.mean([r["curves"]["wall_s"] / r["curves"]["iters"]
                       for r in rows]) * 1e6
-        record("fig6_topology", rows, m.check(rows), us)
+        check = m.check(rows)
+        if not args.sequential:
+            # the topology grid both ways: one stacked-W program vs one
+            # fresh jit per graph
+            seq_rows = m.run(rounds=R6, sequential=True)
+            sweep_wall = grid_wall_s([r["curves"] for r in rows])
+            seq_wall = grid_wall_s([r["curves"] for r in seq_rows])
+            ratio = seq_wall / max(sweep_wall, 1e-9)
+            check["sweep_vs_sequential_speedup"] = round(ratio, 2)
+            bench_sweep["fig6_topology"] = {
+                "grid": "topology (stacked dense W)",
+                "grid_points": len(rows), "rounds": R6,
+                "topologies": [r["topology"] for r in rows],
+                "spectral_lambda": {r["topology"]: round(r["lambda"], 4)
+                                    for r in rows},
+                "sweep_wall_s": round(sweep_wall, 3),
+                "sequential_wall_s": round(seq_wall, 3),
+                "speedup": round(ratio, 3),
+            }
+            lines.append(f"fig6_topology/sweep_vs_sequential,"
+                         f"{sweep_wall * 1e6:.1f},"
+                         f"{ratio:.2f}x (sweep {sweep_wall:.2f}s vs "
+                         f"sequential {seq_wall:.2f}s)")
+            print(lines[-1], flush=True)
+        record("fig6_topology", rows, check, us)
 
     if wanted("fig7_speedup"):
         from benchmarks import fig7_speedup as m
@@ -115,6 +149,12 @@ def main() -> None:
     with open(os.path.join(args.out, "summary.csv"), "w") as f:
         f.write("\n".join(lines) + "\n")
     print(f"\nwrote {args.out}/summary.csv")
+
+    if len(bench_sweep) > 1:  # at least one ratio measured
+        bench_path = os.path.join(_ROOT, "BENCH_sweep.json")
+        with open(bench_path, "w") as f:
+            json.dump(bench_sweep, f, indent=2)
+        print(f"wrote {bench_path}")
 
 
 if __name__ == "__main__":

@@ -31,3 +31,12 @@ from repro.core.gossip import (  # noqa: F401
     torus_mixer,
     identity_mixer,
 )
+from repro.core.mixing import (  # noqa: F401
+    MixPlan,
+    apply_mix,
+    as_dense,
+    as_mixer,
+    plan_spectral_lambda,
+    stack_mixplans,
+    validate_plan,
+)

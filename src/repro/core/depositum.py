@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core.gossip import Mixer, identity_mixer
 from repro.core.hyper import Hyper
+from repro.core.mixing import resolve_mixer
 from repro.core.momentum import MomentumKind, momentum_update
 from repro.core.prox import (
     ProxOperator,
@@ -167,7 +168,12 @@ def step(
     arithmetic, matching the old ``make_prox`` guard); explicit hypers are
     validated at the sweep boundary (``sweep_run`` / ``local_then_comm_round``)
     to keep traced/stacked values off the per-step hot path.
+
+    ``mixer`` may be a legacy ``Mixer`` closure or a
+    :class:`repro.core.mixing.MixPlan` — the latter makes W a traced operand
+    (sweepable over stacked topologies, see ``repro.training.sweep``).
     """
+    mixer, _plan = resolve_mixer(mixer)
     if hyper is None:
         config.validate()
         hp = config.hyper()

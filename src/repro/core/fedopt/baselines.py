@@ -32,8 +32,8 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.gossip import Mixer, make_dense_mixer
 from repro.core.hyper import Hyper
+from repro.core.mixing import MixPlan, apply_mix
 from repro.core.prox import ProxOperator, family_params, get_prox, prox_apply
 
 PyTree = Any
@@ -81,10 +81,15 @@ def _rebroadcast(tree, n):
 class _Algorithm:
     """Shared round interface.
 
-    ``round(state, batches, grad_fn, hyper=None)``: when ``hyper`` (a
-    :class:`repro.core.Hyper`) is given, its alpha/lam/theta override the
-    config floats as traced scalars — the same static/traced split DEPOSITUM
-    uses, so baseline grids can ride the sweep engine for fair comparisons.
+    ``round(state, batches, grad_fn, hyper=None, plan=None)``: when
+    ``hyper`` (a :class:`repro.core.Hyper`) is given, its alpha/lam/theta
+    override the config floats as traced scalars — the same static/traced
+    split DEPOSITUM uses, so baseline grids can ride the sweep engine for
+    fair comparisons.  ``plan`` (a :class:`repro.core.mixing.MixPlan`)
+    likewise overrides the mixing matrix as a traced operand for the
+    *decentralized* algorithms; server-style algorithms (whose aggregation
+    is a client mean, not gossip) reject it rather than silently ignore a
+    topology the caller thought was in effect.
     """
 
     def __init__(self, cfg: FedAlgConfig):
@@ -125,12 +130,22 @@ class _Algorithm:
         x, _ = jax.lax.scan(body, x, batches)
         return x
 
-    def round(self, state, batches, grad_fn, hyper: Hyper | None = None):
+    def _check_no_plan(self, plan):
+        if plan is not None:
+            raise ValueError(
+                f"{type(self).__name__} aggregates via a server mean; a "
+                "MixPlan topology override only applies to decentralized "
+                "algorithms (dsgd)")
+
+    def round(self, state, batches, grad_fn, hyper: Hyper | None = None,
+              plan: MixPlan | None = None):
         raise NotImplementedError  # pragma: no cover - interface
 
 
 class FedMiD(_Algorithm):
-    def round(self, state, batches, grad_fn, hyper: Hyper | None = None):
+    def round(self, state, batches, grad_fn, hyper: Hyper | None = None,
+              plan: MixPlan | None = None):
+        self._check_no_plan(plan)
         n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
         x = self._local_sgd(state.x, batches, grad_fn, use_prox=True,
                             hyper=hyper)
@@ -144,7 +159,9 @@ class FedDR(_Algorithm):
         st = super().init(params, n_clients)
         return st._replace(aux1=st.x)  # y_i = x_i
 
-    def round(self, state, batches, grad_fn, hyper: Hyper | None = None):
+    def round(self, state, batches, grad_fn, hyper: Hyper | None = None,
+              plan: MixPlan | None = None):
+        self._check_no_plan(plan)
         n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
         eta = self.cfg.eta
         xbar = state.aux2
@@ -164,7 +181,9 @@ class FedDR(_Algorithm):
 
 
 class FedADMM(_Algorithm):
-    def round(self, state, batches, grad_fn, hyper: Hyper | None = None):
+    def round(self, state, batches, grad_fn, hyper: Hyper | None = None,
+              plan: MixPlan | None = None):
+        self._check_no_plan(plan)
         n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
         rho = self.cfg.eta
         lam, z = state.aux1, state.aux2
@@ -186,20 +205,29 @@ class FedADMM(_Algorithm):
 
 
 class DSGD(_Algorithm):
-    """Decentralized (prox-)SGD: x <- W prox(x - alpha g); T0 local steps."""
+    """Decentralized (prox-)SGD: x <- W prox(x - alpha g); T0 local steps.
+
+    W comes from ``cfg.W`` (a dense array or a MixPlan); passing ``plan=``
+    to ``round`` overrides it as a *traced operand*, so a stacked dense plan
+    sweeps DSGD over topologies in one compiled program just like DEPOSITUM.
+    """
 
     use_prox = True
 
     def __init__(self, cfg):
         super().__init__(cfg)
-        if cfg.W is None:
-            raise ValueError("DSGD needs a mixing matrix W")
-        self.mixer: Mixer = make_dense_mixer(cfg.W)
+        if isinstance(cfg.W, MixPlan):
+            self.plan = cfg.W
+        elif cfg.W is not None:
+            self.plan = MixPlan.dense(cfg.W)
+        else:
+            raise ValueError("DSGD needs a mixing matrix W (array or MixPlan)")
 
-    def round(self, state, batches, grad_fn, hyper: Hyper | None = None):
+    def round(self, state, batches, grad_fn, hyper: Hyper | None = None,
+              plan: MixPlan | None = None):
         x = self._local_sgd(state.x, batches, grad_fn, use_prox=self.use_prox,
                             hyper=hyper)
-        x = self.mixer(x)
+        x = apply_mix(plan if plan is not None else self.plan, x)
         return state._replace(x=x, t=state.t + 1), {}
 
 

@@ -61,20 +61,21 @@ def make_neighbor_mixer(
     axis_name: str,
     offsets_weights: Sequence[tuple[int, float]],
     self_weight: float,
+    n: int,
 ) -> Mixer:
     """Sparse circulant gossip inside shard_map via lax.ppermute.
 
     ``offsets_weights``: [(offset, weight)] — each client receives neighbor
-    ``(i - offset) mod n`` with that weight (circulant W rows).  For a
+    ``(i + offset) mod n`` with that weight (circulant W rows).  For a
     Metropolis ring of n>=3: offsets (+1, 1/3), (-1, 1/3), self 1/3.
+    ``n`` is the named-axis size (ppermute permutations are static, so it
+    cannot be inferred inside a trace portably).
     """
+    perms = [
+        [((s + off) % n, s) for s in range(n)] for off, _ in offsets_weights
+    ]
 
     def mix(tree):
-        n = jax.lax.axis_size(axis_name)
-        perms = [
-            [((s + off) % n, s) for s in range(n)] for off, _ in offsets_weights
-        ]
-
         def leaf(x):
             out = self_weight * x
             for (off, w), perm in zip(offsets_weights, perms):
@@ -90,24 +91,56 @@ def ring_mixer(axis_name: str, n: int) -> Mixer:
     """Metropolis ring weights as a neighbor mixer (n >= 3)."""
     if n < 3:
         return make_complete_mixer(axis_name)
-    return make_neighbor_mixer(axis_name, [(+1, 1.0 / 3), (-1, 1.0 / 3)], 1.0 / 3)
+    return make_neighbor_mixer(axis_name, [(+1, 1.0 / 3), (-1, 1.0 / 3)],
+                               1.0 / 3, n)
 
 
-def torus_mixer(axis_name: str, n: int) -> Mixer:
-    """Torus gossip: 4 neighbors at offsets ±1, ±b (row-major a×b grid).
-
-    Only exact for the circulant approximation when the grid is a*b with the
-    ±b wrap; weights 1/5 each + 1/5 self (degree-4 Metropolis).
-    """
+def torus_grid_shape(n: int) -> tuple[int, int]:
+    """The near-square a×b factorisation shared by torus_graph/torus_mixer."""
     a = int(np.floor(np.sqrt(n)))
     while n % a != 0:
         a -= 1
-    b = n // a
+    return a, n // a
+
+
+def torus_circulant_spec(n: int):
+    """(offsets_weights, self_weight) of the *circulant* torus on n clients.
+
+    This is deliberately NOT the same matrix as ``topology.torus_graph(n)``:
+    the grid torus has neighbor (r, (c+1) mod b), which is client i+1 only
+    when the column does not wrap, whereas a circulant can only shift by a
+    fixed offset — it connects i to (i±1) mod n and (i±b) mod n globally.
+    Both are symmetric doubly stochastic (Assumption 2 holds for either),
+    both are degree-4 wrap-around graphs with comparable spectral lambda,
+    but they are different graphs whenever b < n — including every
+    *square* grid.  The circulant is the form that maps onto ``ppermute``
+    (a fixed offset per collective), which is why the distributed path uses
+    it; cross-backend equivalence tests must therefore compare the neighbor
+    mixer against ``circulant_from_mixer_spec``/this spec's dense W, never
+    against ``torus_graph``.  On n = 2b the ±b offsets coincide and the
+    shared edge absorbs both weights (still symmetric, doubly stochastic).
+    Returns the ring spec when the factorisation degenerates (a < 2).
+    """
+    a, b = torus_grid_shape(n)
     if a < 2:
-        return ring_mixer(axis_name, n)
-    return make_neighbor_mixer(
-        axis_name, [(+1, 0.2), (-1, 0.2), (+b, 0.2), (-b, 0.2)], 0.2
-    )
+        if n < 3:
+            return None, None  # degenerate: use complete
+        return [(+1, 1.0 / 3), (-1, 1.0 / 3)], 1.0 / 3
+    return [(+1, 0.2), (-1, 0.2), (+b, 0.2), (-b, 0.2)], 0.2
+
+
+def torus_mixer(axis_name: str, n: int) -> Mixer:
+    """Circulant-torus gossip: 4 ppermutes at offsets ±1, ±b (b = n // a).
+
+    Exactly equal to the dense W of :func:`torus_circulant_spec` (tests
+    cross-check square and non-square n); an *approximation* of
+    ``topology.torus_graph``'s Metropolis grid — see the spec's docstring
+    for why the two graphs differ and when that matters.
+    """
+    offsets_weights, self_weight = torus_circulant_spec(n)
+    if offsets_weights is None:
+        return make_complete_mixer(axis_name)
+    return make_neighbor_mixer(axis_name, offsets_weights, self_weight, n)
 
 
 def circulant_from_mixer_spec(

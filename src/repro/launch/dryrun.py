@@ -283,15 +283,18 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
 
 
 def _shardmap_mixer(placement, st_axes, st_shapes, topology):
-    """Topology-aware ppermute mixer (beyond-paper optimisation; §Perf).
+    """Topology-aware shard_map mixer (beyond-paper optimisation; §Perf).
 
-    The mixer is applied to one state *component* (x or y) at a time, so the
+    Any named topology works: ring/complete lower to ppermute/pmean, the
+    rest to an exact dense plan (all_gather + per-shard row contraction) —
+    all via the shared ``MixPlan`` dispatch in ``repro.core.mixing``.  The
+    mixer is applied to one state *component* (x or y) at a time, so the
     spec tree is the param-level tree (with the leading clients dim).
     """
-    from repro.launch.gossip_dist import make_shardmap_ring_mixer
+    from repro.launch.gossip_dist import make_shardmap_mixer, plan_for_topology
 
-    return make_shardmap_ring_mixer(placement, st_axes.x, st_shapes.x,
-                                    topology)
+    plan = plan_for_topology(topology, placement.n_clients)
+    return make_shardmap_mixer(placement, st_axes.x, st_shapes.x, plan)
 
 
 def main():

@@ -1,4 +1,4 @@
-"""Topology-aware distributed gossip: the beyond-paper collective schedule.
+"""Topology-aware distributed gossip: MixPlans under placement shard_map.
 
 The paper-faithful mix contracts the stacked client states with the dense
 mixing matrix W — under GSPMD that is an all-gather over the client axis
@@ -7,51 +7,54 @@ sparse topology (ring: 2 neighbors) the information flow only needs
 O(deg * |theta| / n) bytes: one ``lax.ppermute`` per neighbor offset inside a
 ``shard_map`` over the client axis.
 
-This module builds such a mixer for a given placement: every leaf keeps its
-tensor-parallel spec on the non-client dims; only the client dim is mapped.
-The result is numerically identical to the dense mix with the circulant
-Metropolis-ring W (tests assert this on a host mesh).
+Since the MixPlan refactor this module no longer owns the collective
+schedule: the per-kind shard semantics live in
+:func:`repro.core.mixing.shard_body` (shared with the generic
+``ShardMapBackend``), and this module contributes only what is
+placement-specific — every leaf keeps its tensor-parallel spec on the
+non-client dims; only the client dim is mapped.  The result is numerically
+identical to the dense mix with the corresponding circulant W (tests assert
+this on a host mesh).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
-from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core.mixing import MixPlan, shard_body
 from repro.launch.sharding import Placement, spec_for
 from repro.models.common import is_axes_leaf
 
 
-def _ring_weights(n: int):
-    if n <= 1:
-        return [], 1.0
-    if n == 2:
-        return [(+1, 0.5)], 0.5
-    return [(+1, 1.0 / 3), (-1, 1.0 / 3)], 1.0 / 3
+def plan_for_topology(topology: str, n: int) -> MixPlan:
+    """The cheapest *exact* distributed plan for a named topology.
+
+    Thin alias for ``MixPlan.from_topology(..., prefer="sparse")`` — the
+    one topology -> schedule dispatcher — kept so launch-side callers don't
+    need to know the preference flag.
+    """
+    return MixPlan.from_topology(topology, n, prefer="sparse")
 
 
-def make_shardmap_ring_mixer(placement: Placement, axes_tree: Any,
-                             shapes_tree: Any, topology: str = "ring"):
-    """Mixer over the client mesh axes using ppermute neighbor exchange.
+def make_shardmap_mixer(placement: Placement, axes_tree: Any,
+                        shapes_tree: Any, plan: MixPlan):
+    """Mixer over the client mesh axes executing ``plan`` inside shard_map.
 
     ``axes_tree``/``shapes_tree`` describe the *state* leaves (with the
     leading 'clients' logical dim); the shard_map in/out specs are exactly
     the placement specs, so the surrounding jit sees identical shardings.
+    Dispatch per plan kind (pmean / ppermute / all_gather+contract) is
+    :func:`repro.core.mixing.shard_body` — the same code the sweep engine's
+    ShardMapBackend runs, so the launch path and the sweep path cannot
+    drift apart.
     """
     mesh = placement.mesh
     caxes = placement.clients_axes
     n = placement.n_clients
-    if n <= 1 or not caxes:
+    if n <= 1 or not caxes or plan.kind == "identity":
         return lambda tree: tree
-    if topology == "ring":
-        offsets, self_w = _ring_weights(n)
-    elif topology == "complete":
-        offsets, self_w = None, None
-    else:
-        raise ValueError(f"shardmap mixer supports ring|complete, got {topology}")
 
     axis_name = caxes if len(caxes) > 1 else caxes[0]
 
@@ -66,22 +69,20 @@ def make_shardmap_ring_mixer(placement: Placement, axes_tree: Any,
 
         out_leaves = []
         for leaf, spec in zip(flat, flat_specs):
-            out_leaves.append(_mix_leaf(mesh, axis_name, spec, leaf,
-                                        offsets, self_w, n))
+            fn = shard_map(
+                lambda blk: shard_body(plan, blk, axis_name, n),
+                mesh=mesh, in_specs=(spec,), out_specs=spec,
+            )
+            out_leaves.append(fn(leaf))
         return jax.tree_util.tree_unflatten(treedef, out_leaves)
 
     return mix
 
 
-def _mix_leaf(mesh, axis_name, spec, leaf, offsets, self_w, n):
-    def body(x):
-        if offsets is None:  # complete graph: all-reduce mean
-            return jax.lax.pmean(x, axis_name)
-        out = self_w * x
-        for off, w in offsets:
-            perm = [((s + off) % n, s) for s in range(n)]
-            out = out + w * jax.lax.ppermute(x, axis_name, perm)
-        return out
-
-    fn = shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=spec)
-    return fn(leaf)
+def make_shardmap_ring_mixer(placement: Placement, axes_tree: Any,
+                             shapes_tree: Any, topology: str = "ring"):
+    """Back-compat adapter: ring/complete ppermute mixer by topology name."""
+    if topology not in ("ring", "complete"):
+        raise ValueError(f"shardmap mixer supports ring|complete, got {topology}")
+    plan = plan_for_topology(topology, placement.n_clients)
+    return make_shardmap_mixer(placement, axes_tree, shapes_tree, plan)

@@ -16,10 +16,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import DepositumConfig, make_dense_mixer, identity_mixer
+from repro.core import DepositumConfig, identity_mixer
 from repro.core.depositum import step as depositum_step
-from repro.core.topology import mixing_matrix
+from repro.core.mixing import MixPlan
 from repro.models.registry import Model
+from repro.training.backends import ExecutionBackend, StackedVmapBackend
 
 
 def make_grad_fn(model: Model, microbatch: int = 1):
@@ -70,11 +71,21 @@ def build_train_step(
     topology: str = "ring",
     mixer=None,
     microbatch: int = 1,
+    plan: MixPlan | None = None,
+    backend: ExecutionBackend | None = None,
 ):
-    """(state, batch) -> (state, aux); batch leaves (n, B, ...)."""
+    """(state, batch) -> (state, aux); batch leaves (n, B, ...).
+
+    Mixing resolves in priority order: an explicit ``mixer`` closure (e.g. a
+    placement-aware shard_map mixer from ``launch.gossip_dist``), else a
+    ``plan``/``topology`` executed by ``backend`` (default stacked-vmap:
+    dense contraction, which GSPMD lowers to all-gather + local einsum on a
+    sharded client axis).
+    """
     if mixer is None:
-        W = mixing_matrix(topology, n_clients)
-        mixer = make_dense_mixer(W)
+        if plan is None:
+            plan = MixPlan.from_topology(topology, n_clients)
+        mixer = (backend or StackedVmapBackend()).mixer_for(plan)
     grad_fn = make_grad_fn(model, microbatch=microbatch)
 
     def train_step(state, batch):

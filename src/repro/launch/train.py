@@ -70,6 +70,9 @@ def main():
     tc = TrainerConfig(n_clients=args.clients, topology=args.topology,
                        depositum=dep, seed=args.seed)
     trainer = FederatedTrainer(model, tc)
+    from repro.core import plan_spectral_lambda
+    print(f"topology {args.topology} on {args.clients} clients: "
+          f"spectral lambda = {float(plan_spectral_lambda(trainer.plan, args.clients)):.4f}")
     state = trainer.init_state(jax.random.PRNGKey(args.seed))
     stream = make_federated_lm_streams(cfg.vocab_size, args.clients,
                                        seed=args.seed)

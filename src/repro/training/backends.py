@@ -1,0 +1,153 @@
+"""Execution backends: one round program, three ways to run it.
+
+A backend answers exactly one question — *how does a* :class:`MixPlan`
+*execute on this placement* — so the DEPOSITUM round program
+(``local_then_comm_round``), the sweep engine, the launchers, and the
+fedopt baselines can all share it:
+
+* :class:`StackedVmapBackend` (``"stacked-vmap"``) — single-process
+  simulation: every client variable is stacked on a leading dim and mixing
+  is a plain jnp contraction (:func:`repro.core.mixing.apply_mix`).
+* :class:`ShardMapBackend` (``"shard_map"``) — the client dim is sharded
+  over a named mesh axis; mixing runs inside ``shard_map`` per leaf
+  (``pmean`` for complete, one ``ppermute`` per circulant offset,
+  ``all_gather`` + local row contraction for dense W — W stays a traced
+  operand, so a stacked-W sweep can vmap *over* the shard_map).
+* :class:`SweepBackend` (``"sweep"``) — vmaps whole federated runs over a
+  stacked Hyper/MixPlan axis, delegating per-point mixing to an ``inner``
+  backend (default stacked-vmap; pass a ShardMapBackend to ride the sweep
+  axis over the distributed path).
+
+``get_backend("stacked-vmap" | "shard_map" | "sweep", ...)`` builds one by
+name.  All backends expose ``mixer_for(plan) -> Mixer``; plans with traced
+leaves must be threaded as operands (the sweep engine does this), never
+baked into a jit closure, or the one-program-per-grid guarantee is lost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.mixing import MixPlan, as_mixer, shard_body
+
+Mixer = Callable[[Any], Any]
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """The contract every backend satisfies."""
+
+    name: str
+
+    def mixer_for(self, plan: MixPlan) -> Mixer:  # pragma: no cover
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedVmapBackend:
+    """Simulation semantics: leading client dim, jnp-only mixing."""
+
+    name: str = dataclasses.field(default="stacked-vmap", init=False)
+
+    def mixer_for(self, plan: MixPlan) -> Mixer:
+        return as_mixer(plan)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardMapBackend:
+    """Client dim sharded over ``axis_name`` of ``mesh``.
+
+    ``n_clients`` is the *global* client count (leading-dim length of the
+    state leaves).  Circulant plans additionally require one client per
+    device on the axis (the ppermute schedule is per-shard); dense and
+    complete plans accept any equal block size.
+    """
+
+    mesh: Any
+    axis_name: str = "clients"
+    n_clients: int = 0
+    name: str = dataclasses.field(default="shard_map", init=False)
+
+    def _axis_size(self) -> int:
+        if isinstance(self.axis_name, tuple):
+            size = 1
+            for a in self.axis_name:
+                size *= self.mesh.shape[a]
+            return size
+        return self.mesh.shape[self.axis_name]
+
+    def mixer_for(self, plan: MixPlan) -> Mixer:
+        if plan.kind == "identity":
+            return lambda tree: tree
+        size = self._axis_size()
+        n = self.n_clients or size
+        if n % size != 0:
+            raise ValueError(
+                f"n_clients={n} not divisible by mesh axis "
+                f"{self.axis_name!r} of size {size}")
+        if plan.kind == "circulant" and n != size:
+            raise ValueError(
+                "circulant (ppermute) plans need one client per device; "
+                f"got n_clients={n} on a {size}-way axis — use a dense plan")
+        spec_axis = self.axis_name
+
+        def mix(tree):
+            def leaf(x):
+                spec = P(spec_axis)
+                fn = shard_map(
+                    lambda blk: shard_body(plan, blk, spec_axis, size),
+                    mesh=self.mesh, in_specs=(spec,), out_specs=spec,
+                )
+                return fn(x)
+
+            return jax.tree_util.tree_map(leaf, tree)
+
+        return mix
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepBackend:
+    """Grid semantics: vmap whole runs over stacked Hyper/MixPlan axes.
+
+    ``mixer_for`` delegates to the inner backend (one sweep *point*'s
+    mixing); ``run`` is the full engine — it simply forwards to
+    :func:`repro.training.sweep.sweep_run` with ``backend=self.inner`` so
+    there is exactly one implementation of the grid loop.
+    """
+
+    inner: ExecutionBackend = dataclasses.field(
+        default_factory=StackedVmapBackend)
+    name: str = dataclasses.field(default="sweep", init=False)
+
+    def mixer_for(self, plan: MixPlan) -> Mixer:
+        return self.inner.mixer_for(plan)
+
+    def run(self, params0, grad_fn, config, mixer, hypers, batches, *,
+            n_clients: int, metrics_fn=None, batch_axis=None):
+        from repro.training.sweep import sweep_run
+
+        return sweep_run(params0, grad_fn, config, mixer, hypers, batches,
+                         n_clients=n_clients, metrics_fn=metrics_fn,
+                         batch_axis=batch_axis, backend=self.inner)
+
+
+def get_backend(name: str, *, mesh=None, axis_name: str = "clients",
+                n_clients: int = 0,
+                inner: Optional[ExecutionBackend] = None) -> ExecutionBackend:
+    """Build a backend by its protocol name."""
+    if name == "stacked-vmap":
+        return StackedVmapBackend()
+    if name == "shard_map":
+        if mesh is None:
+            raise ValueError("shard_map backend needs a mesh")
+        return ShardMapBackend(mesh=mesh, axis_name=axis_name,
+                               n_clients=n_clients)
+    if name == "sweep":
+        return SweepBackend(inner=inner or StackedVmapBackend())
+    raise KeyError(
+        f"unknown backend {name!r}; have stacked-vmap | shard_map | sweep")

@@ -1,25 +1,37 @@
-"""Batched hyperparameter-sweep engine: vmap whole DEPOSITUM runs over configs.
+"""Batched sweep engine: vmap whole DEPOSITUM runs over configs *and graphs*.
 
 The paper's experimental section (Figs. 3-7) is a grid study over step sizes
-alpha/beta, momentum gamma, regulariser strength lam, ...  Historically each
-grid point was a separate Python-loop run with a fresh ``jit`` because the
-hyperparameters were baked into closures.  With the Hyper/static split
-(``repro.core.hyper``) they are traced operands, so an entire federated run
-can be ``vmap``-ed over a stacked Hyper axis: the S-point grid becomes **one
-compiled program** — one ``lax.scan`` over rounds, vmapped over the sweep
-axis, composed with the per-client ``vmap`` inside ``grad_fn``.
+alpha/beta, momentum gamma, regulariser strength lam, ... and — Fig. 6 —
+over the communication *topology* itself.  Historically each grid point was
+a separate Python-loop run with a fresh ``jit``: first because the
+hyperparameters were baked into closures (fixed by the Hyper split,
+``repro.core.hyper``), then because the mixer was a closure over a concrete
+W (fixed by :class:`repro.core.mixing.MixPlan`).  With both as traced
+operands, an entire federated run can be ``vmap``-ed over a stacked sweep
+axis: the S-point grid — hyperparameters, topologies, or both zipped —
+becomes **one compiled program**: one ``lax.scan`` over rounds, vmapped over
+the sweep axis, composed with the per-client ``vmap`` inside ``grad_fn``.
 
 Shapes:
-  hypers        Hyper with leaves (S,)
+  hypers        Hyper with leaves (S,)            (or unstacked: broadcast)
+  mixer         Mixer closure, or MixPlan whose leaves may carry a leading
+                (S,) axis (dense: W is (S, n, n)) — the topology sweep axis
   batches       leaves (rounds, T0, n_clients, B, ...)   shared across sweep
                 or (S, rounds, T0, n_clients, B, ...)    per-config data
   final state   leaves (S, n_clients, ...)
   round outputs leaves (S, rounds, ...)
 
-Static structure (momentum kind, prox family, T0, topology/mixer,
-use_fused_kernel) lives in the single ``DepositumConfig`` shared by the whole
-sweep; grids that vary static fields are grouped by the caller (see
-``benchmarks/common.py:run_depositum_grid``).
+*Where* a sweep point executes is an :class:`~repro.training.backends.
+ExecutionBackend`: the default ``stacked-vmap`` keeps clients on a leading
+dim; passing a ``shard_map`` backend runs every point's mixing inside
+``shard_map`` over a device mesh (vmap-of-shard_map), so the distributed
+ppermute/all_gather path rides the same sweep axis and the same equivalence
+tests as the simulation path.
+
+Static structure (momentum kind, prox family, T0, mix *kind*,
+use_fused_kernel) lives in the single ``DepositumConfig`` (plus the plan's
+static fields) shared by the whole sweep; grids that vary static fields are
+grouped by the caller (see ``benchmarks/common.py:run_depositum_grid``).
 """
 from __future__ import annotations
 
@@ -36,11 +48,17 @@ from repro.core import (
     local_then_comm_round,
     n_sweep,
 )
-from repro.core.gossip import Mixer
+from repro.core.hyper import stack_hypers
+from repro.core.mixing import MixPlan, validate_plan
+from repro.training.backends import (
+    ExecutionBackend,
+    StackedVmapBackend,
+)
 
 PyTree = Any
 GradFn = Callable[[PyTree, Any], tuple[PyTree, Any]]
 MetricsFn = Callable[[DepositumState, Hyper], dict]
+Mixer = Callable[[PyTree], PyTree]
 
 
 # ---------------------------------------------------------------------------
@@ -68,42 +86,73 @@ def stack_rounds(batch_list: Iterable[PyTree]) -> PyTree:
 
 
 # ---------------------------------------------------------------------------
-# The engine
+# Sweep-operand plumbing: (mixer | MixPlan) + Hyper -> vmap axes
 # ---------------------------------------------------------------------------
 
-def make_sweep_round(
-    grad_fn: GradFn,
-    config: DepositumConfig,
-    mixer: Mixer,
-    *,
-    batch_axis: Optional[int] = 0,
-) -> Callable:
-    """jit(vmap) of one federated round over the sweep axis.
+def _mapped_len(tree, axis: Optional[int]) -> int:
+    """Sweep-dim length of a pytree mapped at ``axis`` (1 when unmapped)."""
+    if axis is None:
+        return 1
+    return int(jax.tree_util.tree_leaves(tree)[0].shape[axis])
 
-    Returns ``round_fn(states, hypers, batches) -> (states, aux)`` where
-    ``states`` leaves carry a leading sweep dim.  Use this for streaming
-    loops that cannot pre-stack all rounds of data.
 
-    The default ``batch_axis=0`` matches :func:`broadcast_batches` /
-    :func:`sweep_batch_iter`, whose outputs carry a leading (S,) sweep dim;
-    pass ``batch_axis=None`` only when feeding raw (T0, n_clients, ...)
-    batches shared across the sweep.
+def _take(tree, s: int, axis: Optional[int]):
+    """Select sweep point ``s`` of a pytree mapped at ``axis`` (id if None)."""
+    if axis is None:
+        return tree
+    return jax.tree_util.tree_map(lambda v: jnp.take(v, s, axis=axis), tree)
+
+
+def _normalise_operands(mixer, hypers, n_extra: int = 1
+                        ) -> tuple[Optional[Mixer], MixPlan,
+                                   Hyper, int, Any, Any]:
+    """Returns (legacy_mixer, plan, hypers, S, hyper_axes, plan_axes).
+
+    Exactly one of ``legacy_mixer`` / a real plan is active: legacy Mixer
+    closures ride along untouched (plan degenerates to identity with no
+    leaves), MixPlans become traced operands.  Unstacked operands broadcast
+    (in_axes None); stacked ones map (in_axes 0) and must agree on S.
+    ``n_extra`` is the sweep length implied by other mapped operands
+    (params_axis / batch_axis), so params-only or data-only sweeps with an
+    unstacked Hyper/plan still size S correctly.
     """
-    def one(state, hyper, batches):
-        return local_then_comm_round(
-            state, batches, grad_fn, config, mixer, hyper=hyper
-        )
+    if isinstance(mixer, MixPlan):
+        legacy, plan = None, mixer
+    else:
+        legacy, plan = mixer, MixPlan.identity()
 
-    return jax.jit(jax.vmap(one, in_axes=(0, 0, batch_axis)))
+    S_h = n_sweep(hypers)
+    hyper_stacked = jnp.ndim(hypers.alpha) > 0
+    S_p = plan.n_sweep
+    S = max(S_h if hyper_stacked else 1, S_p, n_extra)
+    for name, stacked, length in (("Hyper", hyper_stacked, S_h),
+                                  ("MixPlan", plan.is_stacked, S_p),
+                                  ("params/batches", n_extra > 1, n_extra)):
+        if stacked and length != S:
+            raise ValueError(
+                f"stacked {name} axis ({length}) disagrees with the sweep "
+                f"length {S} (stacked operands are zipped and must match)")
+    if not hyper_stacked and not plan.is_stacked and S == 1:
+        # degenerate 1-point sweep: stack the hyper so vmap has a mapped axis
+        hypers = stack_hypers([hypers])
+        hyper_stacked = True
+    hyper_axes = 0 if hyper_stacked else None
+    plan_axes = 0 if plan.is_stacked else None
+    return legacy, plan, hypers, S, hyper_axes, plan_axes
 
 
-def _scanned_run(params0, grad_fn, config, mixer, n_clients, metrics_fn):
-    """One config's whole run as a scan over rounds: (hyper, batches) ->
-    (final_state, per_round_outputs).  Shared by the vmapped and the serial
-    paths so their computations cannot drift apart."""
-    state0 = dep_init(params0, n_clients)
+def _scanned_run(grad_fn, config, n_clients, metrics_fn, mixer_factory):
+    """One sweep point's whole run as a scan over rounds:
+    (hyper, plan, params, batches) -> (final_state, per_round_outputs).
+    Shared by the vmapped and the serial paths so their computations cannot
+    drift apart.  ``mixer_factory(plan) -> Mixer`` is the backend's
+    execution strategy; the plan arrives as a traced operand, never baked
+    in."""
 
-    def run_one(hyper, batches):
+    def run_one(hyper, plan, params, batches):
+        mixer = mixer_factory(plan)
+        state0 = dep_init(params, n_clients)
+
         def body(state, batches_r):
             state, _ = local_then_comm_round(
                 state, batches_r, grad_fn, config, mixer, hyper=hyper
@@ -124,34 +173,89 @@ def sweep_init(params0: PyTree, n_clients: int, n: int) -> DepositumState:
     )
 
 
+def make_sweep_round(
+    grad_fn: GradFn,
+    config: DepositumConfig,
+    mixer,
+    *,
+    batch_axis: Optional[int] = 0,
+    backend: Optional[ExecutionBackend] = None,
+) -> Callable:
+    """jit(vmap) of one federated round over the sweep axis.
+
+    Returns ``round_fn(states, hypers, batches) -> (states, aux)`` where
+    ``states`` leaves carry a leading sweep dim.  Use this for streaming
+    loops that cannot pre-stack all rounds of data.  ``mixer`` may be a
+    Mixer closure or a (possibly stacked) MixPlan.
+
+    The default ``batch_axis=0`` matches :func:`broadcast_batches` /
+    :func:`sweep_batch_iter`, whose outputs carry a leading (S,) sweep dim;
+    pass ``batch_axis=None`` only when feeding raw (T0, n_clients, ...)
+    batches shared across the sweep.
+    """
+    backend = backend or StackedVmapBackend()
+    legacy, plan, _, _, _, plan_axes = _normalise_operands(
+        mixer, Hyper.create())
+    mixer_factory = ((lambda p: legacy) if legacy is not None
+                     else backend.mixer_for)
+
+    def one(state, hyper, plan, batches):
+        return local_then_comm_round(
+            state, batches, grad_fn, config, mixer_factory(plan), hyper=hyper
+        )
+
+    vm = jax.vmap(one, in_axes=(0, 0, plan_axes, batch_axis))
+    return jax.jit(lambda states, hypers, batches:
+                   vm(states, hypers, plan, batches))
+
+
 def sweep_run(
     params0: PyTree,
     grad_fn: GradFn,
     config: DepositumConfig,
-    mixer: Mixer,
+    mixer,
     hypers: Hyper,
     batches: PyTree,
     *,
     n_clients: int,
     metrics_fn: Optional[MetricsFn] = None,
     batch_axis: Optional[int] = None,
+    params_axis: Optional[int] = None,
+    backend: Optional[ExecutionBackend] = None,
 ) -> tuple[DepositumState, dict]:
-    """Run ``rounds`` federated rounds for every hyperparameter point at once.
+    """Run ``rounds`` federated rounds for every sweep point at once.
 
+    ``mixer``: a legacy Mixer closure (topology fixed for the whole sweep)
+    or a :class:`MixPlan`; a *stacked* plan (dense W of shape (S, n, n))
+    makes the topology itself a sweep dimension, zipped with the Hyper axis.
     ``batches`` leaves: (rounds, T0, n_clients, B, ...) — shared across the
     sweep (``batch_axis=None``, the common fair-comparison case) or with an
-    extra leading (S,) dim (``batch_axis=0``).  Returns the stacked final
-    state and a dict of per-round outputs with leaves (S, rounds, ...)
+    extra leading (S,) dim (``batch_axis=0``).  ``params_axis=0`` likewise
+    sweeps the *initialisation*: params0 leaves carry a leading (S,) dim
+    (used to batch per-seed runs, e.g. Table III).  ``backend`` picks where
+    each point executes (default stacked-vmap simulation; a ShardMapBackend
+    runs mixing inside shard_map over a device mesh).  Returns the stacked
+    final state and a dict of per-round outputs with leaves (S, rounds, ...)
     (empty if ``metrics_fn`` is None).
 
-    The whole thing is one jitted program: scan over rounds inside, vmap over
-    the sweep axis outside, client vmap innermost (inside ``grad_fn``).
+    The whole thing is one jitted program: scan over rounds inside, vmap
+    over the sweep axis outside, client vmap innermost (inside ``grad_fn``).
     """
+    backend = backend or StackedVmapBackend()
     config.validate(hypers)  # host-side range checks on the concrete grid
-    run_one = _scanned_run(params0, grad_fn, config, mixer, n_clients,
-                           metrics_fn)
-    runner = jax.jit(jax.vmap(run_one, in_axes=(0, batch_axis)))
-    final_states, outs = runner(hypers, batches)
+    n_extra = max(_mapped_len(params0, params_axis),
+                  _mapped_len(batches, batch_axis))
+    legacy, plan, hypers, S, hyper_axes, plan_axes = _normalise_operands(
+        mixer, hypers, n_extra)
+    if legacy is None:
+        validate_plan(plan, n_clients)
+    mixer_factory = ((lambda p: legacy) if legacy is not None
+                     else backend.mixer_for)
+    run_one = _scanned_run(grad_fn, config, n_clients, metrics_fn,
+                           mixer_factory)
+    runner = jax.jit(jax.vmap(
+        run_one, in_axes=(hyper_axes, plan_axes, params_axis, batch_axis)))
+    final_states, outs = runner(hypers, plan, params0, batches)
     return final_states, outs
 
 
@@ -159,36 +263,104 @@ def sweep_run_sequential(
     params0: PyTree,
     grad_fn: GradFn,
     config: DepositumConfig,
-    mixer: Mixer,
+    mixer,
     hypers: Hyper,
     batches: PyTree,
     *,
     n_clients: int,
     metrics_fn: Optional[MetricsFn] = None,
     batch_axis: Optional[int] = None,
+    params_axis: Optional[int] = None,
+    backend: Optional[ExecutionBackend] = None,
 ) -> tuple[DepositumState, dict]:
-    """Reference path: same computation, one config at a time (python loop).
+    """Reference path: same computation, one sweep point at a time.
 
     Used by the equivalence tests and the sweep-vs-sequential wall-clock
-    ratio.  Each point still runs the scanned round function, but configs are
+    ratio.  Each point still runs the scanned round function, but points are
     processed serially and results re-stacked on the sweep axis.
     """
-    S = n_sweep(hypers)
+    backend = backend or StackedVmapBackend()
     config.validate(hypers)
+    n_extra = max(_mapped_len(params0, params_axis),
+                  _mapped_len(batches, batch_axis))
+    legacy, plan, hypers, S, hyper_axes, plan_axes = _normalise_operands(
+        mixer, hypers, n_extra)
+    if legacy is None:
+        validate_plan(plan, n_clients)  # same legality gate as sweep_run
+    mixer_factory = ((lambda p: legacy) if legacy is not None
+                     else backend.mixer_for)
     # the *same* scanned program as sweep_run — only the batching differs —
     # so the equivalence the tests assert is between vmap and a serial loop,
     # never between two drifting copies of the round logic
-    run_one = jax.jit(_scanned_run(params0, grad_fn, config, mixer,
-                                   n_clients, metrics_fn))
+    run_one = jax.jit(_scanned_run(grad_fn, config, n_clients,
+                                   metrics_fn, mixer_factory))
 
     results = []
     for s in range(S):
-        hyper_s = jax.tree_util.tree_map(lambda v: v[s], hypers)
-        batches_s = batches if batch_axis is None else (
-            jax.tree_util.tree_map(lambda b: b[s], batches))
-        results.append(run_one(hyper_s, batches_s))
+        hyper_s = (jax.tree_util.tree_map(lambda v: v[s], hypers)
+                   if hyper_axes == 0 else hypers)
+        plan_s = plan.point(s)
+        params_s = _take(params0, s, params_axis)
+        batches_s = _take(batches, s, batch_axis)
+        results.append(run_one(hyper_s, plan_s, params_s, batches_s))
     final = jax.tree_util.tree_map(lambda *vs: jnp.stack(vs),
                                    *[r[0] for r in results])
     outs = jax.tree_util.tree_map(lambda *vs: jnp.stack(vs),
                                   *[r[1] for r in results]) if results[0][1] else {}
     return final, outs
+
+
+# ---------------------------------------------------------------------------
+# Fedopt baselines through the same engine (Table III grids)
+# ---------------------------------------------------------------------------
+
+def sweep_run_fedalg(
+    alg,
+    params0: PyTree,
+    grad_fn: GradFn,
+    hypers: Hyper,
+    batches: PyTree,
+    *,
+    n_clients: int,
+    metrics_fn=None,
+    batch_axis: Optional[int] = None,
+    params_axis: Optional[int] = None,
+    plan: Optional[MixPlan] = None,
+) -> tuple[Any, dict]:
+    """Vmap a fedopt baseline's whole run over a stacked sweep axis.
+
+    ``alg`` is a ``repro.core.fedopt`` algorithm; its ``round`` accepts the
+    same traced ``hyper`` override (and decentralized algorithms the same
+    traced ``plan``) as DEPOSITUM, so Table-III baseline grids compile to
+    one program per algorithm exactly like the DEPOSITUM grids.
+
+    ``batches`` leaves: (rounds, T0, n, B, ...) — the round count is their
+    leading (post-sweep-axis) dim, as in :func:`sweep_run` — optionally with
+    a leading (S,) sweep dim (``batch_axis=0``).  ``params_axis=0`` sweeps
+    over initialisations too (leaves (S, ...)) — used to batch the per-seed
+    runs of Table III.  A scalar Hyper broadcasts over whatever defines the
+    sweep axis (stacked plan, per-seed params, or per-point data), exactly
+    as in :func:`sweep_run`.  Returns (final_state, outs) with a leading
+    (S,) dim.
+    """
+    n_extra = max(_mapped_len(params0, params_axis),
+                  _mapped_len(batches, batch_axis))
+    _, plan_arg, hypers, S, hyper_axes, plan_axes = _normalise_operands(
+        plan if plan is not None else MixPlan.identity(), hypers, n_extra)
+
+    def run_one(hyper, plan_s, params, batches):
+        state0 = alg.init(params, n_clients)
+
+        def body(state, batches_r):
+            kw = {"hyper": hyper}
+            if plan is not None:
+                kw["plan"] = plan_s
+            state, _ = alg.round(state, batches_r, grad_fn, **kw)
+            out = metrics_fn(state, hyper) if metrics_fn is not None else {}
+            return state, out
+
+        return jax.lax.scan(body, state0, batches)
+
+    runner = jax.jit(jax.vmap(
+        run_one, in_axes=(hyper_axes, plan_axes, params_axis, batch_axis)))
+    return runner(hypers, plan_arg, params0, batches)

@@ -20,12 +20,11 @@ from repro.core import (
     DepositumState,
     init as dep_init,
     local_then_comm_round,
-    make_dense_mixer,
-    mixing_matrix,
     stationarity_metrics,
-    validate_mixing,
 )
+from repro.core.mixing import MixPlan, validate_plan
 from repro.models.registry import Model
+from repro.training.backends import ExecutionBackend, StackedVmapBackend
 
 
 @dataclasses.dataclass
@@ -40,13 +39,16 @@ class TrainerConfig:
 class FederatedTrainer:
     """Drives DEPOSITUM rounds for a zoo model on stacked client batches."""
 
-    def __init__(self, model: Model, cfg: TrainerConfig, mixer=None):
+    def __init__(self, model: Model, cfg: TrainerConfig, mixer=None,
+                 backend: ExecutionBackend | None = None):
         self.model = model
         self.cfg = cfg
-        W = mixing_matrix(cfg.topology, cfg.n_clients)
-        validate_mixing(W)
-        self.W = W
-        self.mixer = mixer if mixer is not None else make_dense_mixer(W)
+        plan = MixPlan.from_topology(cfg.topology, cfg.n_clients)
+        validate_plan(plan, cfg.n_clients)
+        self.plan = plan
+        self.W = np.asarray(plan.W)
+        self.mixer = (mixer if mixer is not None
+                      else (backend or StackedVmapBackend()).mixer_for(plan))
 
         def per_client_loss(params, batch):
             return model.loss(params, batch)

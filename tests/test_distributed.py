@@ -104,6 +104,96 @@ def test_depositum_distributed_equals_host():
     assert "OK" in out
 
 
+def test_topology_sweep_shardmap_backend_equals_sequential():
+    """A stacked-W topology sweep under the shard_map backend (vmap over a
+    shard_map'd client mesh: dense all_gather+contract, W a traced operand)
+    must match sweep_run_sequential on the stacked-vmap backend — the
+    sweep x shard_map equivalence the MixPlan refactor promises."""
+    out = run_py(textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import (DepositumConfig, Hyper, MixPlan,
+                                stack_hypers, stack_mixplans)
+        from repro.training.backends import get_backend
+        from repro.training.sweep import sweep_run, sweep_run_sequential
+
+        N, D, T0, ROUNDS = 8, 12, 3, 5
+        key = jax.random.PRNGKey(0)
+        A = jax.random.normal(key, (N, 16, D))
+        w_true = jax.random.normal(jax.random.fold_in(key, 1), (D,))
+        b = jnp.einsum("nmd,d->nm", A, w_true)
+        def grad_fn(w, batch):
+            r = jnp.einsum("nmd,nd->nm", A, w) - b
+            return jnp.einsum("nmd,nm->nd", A, r) / A.shape[1], {}
+
+        cfg = DepositumConfig(momentum="polyak", comm_period=T0,
+                              prox_name="l1", prox_kwargs={"lam": 1e-3})
+        mesh = jax.make_mesh((8,), ("clients",))
+        be = get_backend("shard_map", mesh=mesh, axis_name="clients",
+                         n_clients=N)
+
+        topos = ["complete", "ring", "star", "torus"]
+        plans = stack_mixplans([MixPlan.from_topology(t, N) for t in topos])
+        h = Hyper.create(alpha=0.05, beta=1.0, gamma=0.5, lam=1e-3)
+        hypers = stack_hypers([h] * len(topos))
+        batches = jnp.zeros((ROUNDS, T0, 1))
+
+        fs, _ = sweep_run(jnp.zeros(D), grad_fn, cfg, plans, hypers,
+                          batches, n_clients=N, backend=be)
+        fseq, _ = sweep_run_sequential(jnp.zeros(D), grad_fn, cfg, plans,
+                                       hypers, batches, n_clients=N)
+        err = float(jnp.max(jnp.abs(fs.x - fseq.x)))
+        assert err < 1e-5, err
+
+        # circulant (ppermute) sweep point == dense ring point
+        pr = MixPlan.circulant([(+1, 1/3), (-1, 1/3)], 1/3)
+        f1, _ = sweep_run(jnp.zeros(D), grad_fn, cfg, pr, stack_hypers([h]),
+                          batches, n_clients=N, backend=be)
+        err2 = float(jnp.max(jnp.abs(f1.x[0] - fseq.x[topos.index("ring")])))
+        assert err2 < 1e-5, err2
+        print("OK", err, err2)
+    """))
+    assert "OK" in out
+
+
+def test_placement_shardmap_mixer_all_topologies():
+    """launch.gossip_dist executes any named topology exactly: ring/complete
+    via ppermute/pmean, star/torus via the dense all_gather+contract plan —
+    all matching the dense einsum mixer on an 8-device host mesh."""
+    out = run_py(textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.sharding import Placement, _RULES_REPLICATED
+        from repro.launch.gossip_dist import (make_shardmap_mixer,
+                                              plan_for_topology)
+        from repro.core.gossip import make_dense_mixer
+        from repro.core.topology import mixing_matrix
+
+        mesh = jax.make_mesh((8, 1), ("data", "model"))
+        placement = Placement(mode="replicated", mesh=mesh,
+                              clients_axes=("data",),
+                              rules=dict(_RULES_REPLICATED))
+        n, d = 8, 16
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((n, d)),
+                        jnp.float32)
+        xs = jax.device_put(x, NamedSharding(mesh, P("data")))
+        axes = ("clients", "mlp")
+        shapes = jax.ShapeDtypeStruct((n, d), jnp.float32)
+        for topo in ("ring", "complete", "star", "torus"):
+            plan = plan_for_topology(topo, n)
+            mix = make_shardmap_mixer(placement, axes, shapes, plan)
+            got = jax.jit(mix)(xs)
+            ref = make_dense_mixer(mixing_matrix(topo, n))(x)
+            err = float(jnp.max(jnp.abs(got - ref)))
+            assert err < 1e-5, (topo, err)
+        print("OK")
+    """))
+    assert "OK" in out
+
+
 def test_tiny_dryrun_mesh_compiles():
     """A miniature dry-run (2x4 mesh, reduced arch) exercises the launch
     path end-to-end inside a subprocess."""

@@ -20,12 +20,14 @@ from repro.core import (
     stack_hypers,
     stationarity_metrics,
 )
+from repro.core import MixPlan, plan_spectral_lambda, stack_mixplans
 from repro.training.sweep import (
     broadcast_batches,
     make_sweep_round,
     stack_rounds,
     sweep_init,
     sweep_run,
+    sweep_run_fedalg,
     sweep_run_sequential,
 )
 
@@ -198,6 +200,183 @@ def test_baseline_grid_vmaps_over_hyper(alg):
         st, _ = a_s.round(st, batches, grad_fn)
         np.testing.assert_allclose(np.asarray(got[s]), np.asarray(st.x),
                                    rtol=2e-5, atol=1e-6)
+
+
+TOPOS = ["complete", "ring", "star", "torus"]
+
+
+def test_topology_sweep_matches_sequential_and_classic():
+    """A stacked dense-W MixPlan makes topology a sweep axis: one vmapped
+    program over ≥3 graphs == per-topology sequential runs == the classic
+    closure-mixer path (acceptance criterion of the MixPlan tentpole)."""
+    grad_fn = linear_problem()
+    cfg = DepositumConfig(momentum="polyak", comm_period=T0, prox_name="l1",
+                          prox_kwargs={"lam": 1e-3})
+    plans = stack_mixplans([MixPlan.from_topology(t, N) for t in TOPOS])
+    h = Hyper.create(alpha=0.05, beta=1.0, gamma=0.5, lam=1e-3)
+    hypers = stack_hypers([h] * len(TOPOS))
+    batches = jnp.zeros((ROUNDS, T0, 1))
+
+    fs, _ = sweep_run(jnp.zeros(D), grad_fn, cfg, plans, hypers, batches,
+                      n_clients=N)
+    fseq, _ = sweep_run_sequential(jnp.zeros(D), grad_fn, cfg, plans, hypers,
+                                   batches, n_clients=N)
+    for name in ("x", "y", "nu", "mu", "g"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(fs, name)), np.asarray(getattr(fseq, name)),
+            rtol=2e-5, atol=1e-6, err_msg=f"leaf {name}")
+
+    # each sweep point == the pre-refactor closure-mixer run of its graph
+    for s, topo in enumerate(TOPOS):
+        mixer = make_dense_mixer(mixing_matrix(topo, N))
+        state = dep_init(jnp.zeros(D), N)
+        rnd = jax.jit(functools.partial(local_then_comm_round,
+                                        grad_fn=grad_fn, config=cfg,
+                                        mixer=mixer, hyper=h))
+        for _ in range(ROUNDS):
+            state, _ = rnd(state, batches=jnp.zeros((T0, 1)))
+        np.testing.assert_allclose(np.asarray(fs.x[s]), np.asarray(state.x),
+                                   rtol=2e-5, atol=1e-6, err_msg=topo)
+
+    # per-point spectral lambda is reportable from the same plan operand
+    lams = plan_spectral_lambda(plans, N)
+    assert lams.shape == (len(TOPOS),) and lams[0] < 1e-6 < lams[1] < 1.0
+
+
+def test_topology_sweep_broadcasts_unstacked_hyper():
+    """Topology-only sweeps need no stacked Hyper: the scalar hyper
+    broadcasts over the plan axis."""
+    grad_fn = linear_problem()
+    cfg = DepositumConfig(momentum="polyak", comm_period=T0, prox_name="l1",
+                          prox_kwargs={"lam": 1e-3})
+    plans = stack_mixplans([MixPlan.from_topology(t, N)
+                            for t in ("complete", "ring", "star")])
+    h = Hyper.create(alpha=0.05, beta=1.0, gamma=0.5, lam=1e-3)
+    batches = jnp.zeros((ROUNDS, T0, 1))
+    fs, _ = sweep_run(jnp.zeros(D), grad_fn, cfg, plans, h, batches,
+                      n_clients=N)
+    fs2, _ = sweep_run(jnp.zeros(D), grad_fn, cfg, plans, stack_hypers([h] * 3),
+                       batches, n_clients=N)
+    np.testing.assert_allclose(np.asarray(fs.x), np.asarray(fs2.x),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_zipped_hyper_and_topology_axes_must_agree():
+    grad_fn = linear_problem()
+    cfg = DepositumConfig(momentum="polyak", comm_period=T0, prox_name="l1",
+                          prox_kwargs={"lam": 1e-3})
+    plans = stack_mixplans([MixPlan.from_topology(t, N)
+                            for t in ("complete", "ring")])
+    hypers = stack_hypers([Hyper.create(lam=1e-3)] * 3)  # wrong length
+    with pytest.raises(ValueError):
+        sweep_run(jnp.zeros(D), grad_fn, cfg, plans, hypers,
+                  jnp.zeros((ROUNDS, T0, 1)), n_clients=N)
+
+
+def test_params_axis_sweeps_initialisations():
+    """params_axis=0 batches per-seed initial points (Table III style)."""
+    grad_fn = linear_problem()
+    cfg = DepositumConfig(momentum="polyak", comm_period=T0, prox_name="l1",
+                          prox_kwargs={"lam": 1e-3})
+    plan = MixPlan.from_topology("ring", N)
+    h = Hyper.create(alpha=0.05, beta=1.0, gamma=0.5, lam=1e-3)
+    batches = jnp.zeros((ROUNDS, T0, 1))
+    key = jax.random.PRNGKey(3)
+    inits = jax.random.normal(key, (3, D)) * 0.1
+
+    fs, _ = sweep_run(inits, grad_fn, cfg, plan, stack_hypers([h] * 3),
+                      batches, n_clients=N, params_axis=0)
+    for s in range(3):
+        f1, _ = sweep_run(inits[s], grad_fn, cfg, plan, stack_hypers([h]),
+                          batches, n_clients=N)
+        np.testing.assert_allclose(np.asarray(fs.x[s]), np.asarray(f1.x[0]),
+                                   rtol=2e-5, atol=1e-6)
+
+
+def test_params_only_sweep_with_unstacked_hyper():
+    """params_axis=0 with a scalar Hyper must broadcast the hyper over the
+    seed axis — in BOTH the vmapped and the sequential engine (regression:
+    the sequential path used to silently run only seed 0)."""
+    grad_fn = linear_problem()
+    cfg = DepositumConfig(momentum="polyak", comm_period=T0, prox_name="l1",
+                          prox_kwargs={"lam": 1e-3})
+    plan = MixPlan.from_topology("ring", N)
+    h = Hyper.create(alpha=0.05, beta=1.0, gamma=0.5, lam=1e-3)
+    batches = jnp.zeros((ROUNDS, T0, 1))
+    inits = jax.random.normal(jax.random.PRNGKey(5), (3, D)) * 0.1
+
+    fs, _ = sweep_run(inits, grad_fn, cfg, plan, h, batches,
+                      n_clients=N, params_axis=0)
+    fseq, _ = sweep_run_sequential(inits, grad_fn, cfg, plan, h, batches,
+                                   n_clients=N, params_axis=0)
+    assert fs.x.shape[0] == 3 and fseq.x.shape[0] == 3
+    np.testing.assert_allclose(np.asarray(fs.x), np.asarray(fseq.x),
+                               rtol=2e-5, atol=1e-6)
+    # and the stacked runs differ across seeds (nothing collapsed to seed 0)
+    assert float(jnp.max(jnp.abs(fs.x[0] - fs.x[1]))) > 1e-6
+
+
+def test_fedalg_topology_sweep_with_unstacked_hyper():
+    """sweep_run_fedalg must size the sweep from a stacked plan alone."""
+    from repro.core import mixing_matrix as mixmat
+    from repro.core.fedopt import FedAlgConfig, make_algorithm
+
+    grad_fn = linear_problem()
+    topos = ("complete", "ring", "star")
+    cfg = FedAlgConfig(alpha=0.1, local_steps=T0, prox_name="l1",
+                       prox_kwargs={"lam": 1e-3}, W=mixmat("ring", N))
+    a = make_algorithm("dsgd", cfg)
+    plans = stack_mixplans([MixPlan.from_topology(t, N) for t in topos])
+    h = Hyper.create(alpha=0.1, lam=1e-3)
+    batches = jnp.broadcast_to(jnp.zeros((T0, 1)), (ROUNDS, T0, 1))
+    fs, _ = sweep_run_fedalg(a, jnp.zeros(D), grad_fn, h, batches,
+                             n_clients=N, plan=plans)
+    fs2, _ = sweep_run_fedalg(a, jnp.zeros(D), grad_fn,
+                              stack_hypers([h] * len(topos)), batches,
+                              n_clients=N, plan=plans)
+    np.testing.assert_allclose(np.asarray(fs.x), np.asarray(fs2.x),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_fedalg_topology_sweep_through_engine():
+    """DSGD rides the same engine: a stacked dense plan sweeps the baseline
+    over topologies in one compiled program, matching per-plan rounds."""
+    from repro.core import mixing_matrix as mixmat
+    from repro.core.fedopt import FedAlgConfig, make_algorithm
+
+    grad_fn = linear_problem()
+    topos = ("complete", "ring", "star")
+    cfg = FedAlgConfig(alpha=0.1, local_steps=T0, prox_name="l1",
+                       prox_kwargs={"lam": 1e-3}, W=mixmat("ring", N))
+    a = make_algorithm("dsgd", cfg)
+    plans = stack_mixplans([MixPlan.from_topology(t, N) for t in topos])
+    h = Hyper.create(alpha=0.1, lam=1e-3)
+    hypers = stack_hypers([h] * len(topos))
+    batches = jnp.broadcast_to(jnp.zeros((T0, 1)), (ROUNDS, T0, 1))
+
+    fs, _ = sweep_run_fedalg(a, jnp.zeros(D), grad_fn, hypers, batches,
+                             n_clients=N, plan=plans)
+    for s, t in enumerate(topos):
+        st = a.init(jnp.zeros(D), N)
+        p = MixPlan.from_topology(t, N)
+        for _ in range(ROUNDS):
+            st, _ = a.round(st, jnp.zeros((T0, 1)), grad_fn, hyper=h, plan=p)
+        np.testing.assert_allclose(np.asarray(fs.x[s]), np.asarray(st.x),
+                                   rtol=2e-5, atol=1e-6, err_msg=t)
+
+
+def test_server_algorithms_reject_topology_plan():
+    from repro.core import mixing_matrix as mixmat
+    from repro.core.fedopt import FedAlgConfig, make_algorithm
+
+    grad_fn = linear_problem()
+    cfg = FedAlgConfig(alpha=0.1, local_steps=T0, prox_name="l1",
+                       prox_kwargs={"lam": 1e-3}, W=mixmat("ring", N))
+    a = make_algorithm("fedmid", cfg)
+    st = a.init(jnp.zeros(D), N)
+    with pytest.raises(ValueError):
+        a.round(st, jnp.zeros((T0, 1)), grad_fn,
+                plan=MixPlan.from_topology("ring", N))
 
 
 def test_stack_rounds_and_metrics_shapes():
