@@ -1,0 +1,194 @@
+"""Fig. 8 (beyond-paper, Remark 3 study): time-varying communication.
+
+The paper's Remark 3 extends DEPOSITUM's guarantees to time-varying
+networks where only a random subgraph participates each round; Chebyshev
+acceleration (Sec. I-A) is the classic lever on the other side of the
+communication/computation trade.  This benchmark sweeps BOTH knobs over a
+ring of clients in **one compiled program**: lazy participation
+p_active ∈ {0.3, 0.6, 1.0} and Chebyshev orders k ∈ {1, 2, 3} (k = 1 is
+plain gossip, so the grid brackets the static baseline from both sides).
+
+Every point is a round-indexed :class:`~repro.core.schedule.MixSchedule`;
+heterogeneous kinds (lazy masks vs static-k chebyshev) densify to the
+universal per-round stacked form (``as_stacked_schedule``) and stack on
+the sweep axis — schedule is a sweep dimension exactly like Hyper and
+topology.  ``sequential=True`` runs one fresh-jit program per schedule
+instead; ``benchmarks/run.py`` records the wall-clock ratio in
+``BENCH_sweep.json`` under ``schedule_grid``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import sys
+import time
+
+# allow `python benchmarks/fig8_timevarying.py` from anywhere (like run.py)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DepositumConfig,
+    MixPlan,
+    MixSchedule,
+    as_stacked_schedule,
+    mixing_matrix,
+    schedule_spectral_lambda,
+    stack_hypers,
+    stack_schedules,
+    stationarity_metrics,
+    validate_schedule,
+)
+from repro.data import make_classification
+from repro.training.sweep import sweep_run
+
+from benchmarks.common import MODELS, ce_loss
+
+N_CLIENTS = 10
+P_ACTIVE = [0.3, 0.6, 1.0]
+CHEBY_K = [1, 2, 3]
+
+
+def schedule_points(rounds: int):
+    """(name, params, native MixSchedule) for every grid point."""
+    base = MixPlan.dense(mixing_matrix("ring", N_CLIENTS))
+    pts = [(f"lazy_p{p}", {"p_active": p},
+            MixSchedule.lazy(base, p, rounds=rounds, seed=42))
+           for p in P_ACTIVE]
+    pts += [(f"cheby_k{k}", {"cheby_k": k}, MixSchedule.chebyshev(base, k))
+            for k in CHEBY_K]
+    return pts
+
+
+def run(rounds: int = 30, sequential: bool = False):
+    dep = DepositumConfig(alpha=0.05, beta=0.5, gamma=0.5, comm_period=5,
+                          prox_name="l1", prox_kwargs={"lam": 1e-4})
+    ds = make_classification(n_samples=2048, n_features=64, n_classes=5,
+                             n_clients=N_CLIENTS, theta=1.0, seed=0)
+    init_fn, apply_fn = MODELS["mlp"]
+    params0 = init_fn(jax.random.PRNGKey(0), 64, 5)
+
+    loss_one = functools.partial(ce_loss, apply_fn)
+    grad_one = jax.grad(loss_one)
+
+    def grad_fn(x_stacked, batch):
+        return jax.vmap(grad_one)(x_stacked, batch), {}
+
+    xs_full = jnp.asarray(np.stack([ds.client_arrays(i)[0]
+                                    for i in range(N_CLIENTS)]))
+    ys_full = jnp.asarray(np.stack([ds.client_arrays(i)[1]
+                                    for i in range(N_CLIENTS)]))
+    all_x = xs_full.reshape(-1, 64)
+    all_y = ys_full.reshape(-1)
+    grad_fns = {
+        "local_at": lambda xst: jax.vmap(grad_one)(
+            xst, {"x": xs_full, "y": ys_full}),
+        "global_at": lambda xst: jax.vmap(
+            lambda p: grad_one(p, {"x": all_x, "y": all_y}))(xst),
+    }
+
+    pts = schedule_points(rounds)
+    grid = stack_schedules([as_stacked_schedule(s, rounds, N_CLIENTS)
+                            for _, _, s in pts])
+    validate_schedule(grid, N_CLIENTS)
+    lams = schedule_spectral_lambda(grid, N_CLIENTS, rounds=rounds)
+    hypers = stack_hypers([dep.hyper()] * len(pts))
+
+    rng = np.random.default_rng(7)
+    draws = [ds.stacked_batches(rng, 32, dep.comm_period)
+             for _ in range(rounds)]
+    batches = {"x": jnp.asarray(np.stack([d[0] for d in draws])),
+               "y": jnp.asarray(np.stack([d[1] for d in draws]))}
+
+    def metrics_fn(state, hyper):
+        m = stationarity_metrics(state, grad_fns, dep, hyper=hyper)
+        pbar = jax.tree_util.tree_map(lambda v: jnp.mean(v, 0), state.x)
+        logits = apply_fn(pbar, all_x)
+        m["accuracy"] = jnp.mean(
+            (jnp.argmax(logits, -1) == all_y).astype(jnp.float32))
+        m["loss"] = loss_one(pbar, {"x": all_x, "y": all_y})
+        return m
+
+    t0 = time.perf_counter()
+    if sequential:
+        # legacy comparison: one fresh-jit program per schedule point (each
+        # sweep_run call builds a new jitted closure), like fig3/fig6's
+        # sequential baselines
+        outs_pts = []
+        for s in range(len(pts)):
+            _f, o = sweep_run(params0, grad_fn, dep, grid.point(s),
+                              dep.hyper(), batches, n_clients=N_CLIENTS,
+                              metrics_fn=metrics_fn)
+            outs_pts.append(jax.tree_util.tree_map(np.asarray, o))
+        outs = jax.tree_util.tree_map(
+            lambda *vs: np.concatenate(vs), *outs_pts)
+    else:
+        _final, outs = sweep_run(params0, grad_fn, dep, grid, hypers,
+                                 batches, n_clients=N_CLIENTS,
+                                 metrics_fn=metrics_fn)
+        outs = jax.tree_util.tree_map(np.asarray, outs)  # block + to host
+    wall = time.perf_counter() - t0
+
+    keys = ("loss", "accuracy", "consensus_x", "stationarity")
+    rows = []
+    for s, (name, params, _sched) in enumerate(pts):
+        curves = {"round": list(range(1, rounds + 1))}
+        for k in keys:
+            curves[k] = [float(v) for v in outs[k][s]]
+        curves["wall_s"] = wall / len(pts)
+        curves["iters"] = rounds * dep.comm_period
+        curves["sweep_group_id"] = None if sequential else 0
+        curves["sweep_group_size"] = len(pts)
+        curves["sweep_group_wall_s"] = wall
+        rows.append({
+            "schedule": name, **params,
+            "mean_lambda": float(np.mean(lams[s])),
+            "final_loss": curves["loss"][-1],
+            "final_acc": curves["accuracy"][-1],
+            "final_consensus_x": curves["consensus_x"][-1],
+            "wall_s": curves["wall_s"],
+            "sweep_group_id": curves["sweep_group_id"],
+            "sweep_group_wall_s": wall,
+            "curves": curves,
+        })
+    return rows
+
+
+def check(rows) -> dict:
+    by = {r["schedule"]: r for r in rows}
+    return {
+        # more participation -> tighter consensus (Remark 3 intuition)
+        "participation_helps_consensus":
+            by["lazy_p1.0"]["final_consensus_x"]
+            <= by["lazy_p0.3"]["final_consensus_x"] + 1e-6,
+        # chebyshev shrinks the effective lambda monotonically in k
+        "chebyshev_shrinks_lambda":
+            by["cheby_k3"]["mean_lambda"] < by["cheby_k2"]["mean_lambda"]
+            < by["cheby_k1"]["mean_lambda"],
+        # k=1 == plain gossip == the p=1.0 lazy point's graph
+        "k1_matches_full_participation_lambda":
+            abs(by["cheby_k1"]["mean_lambda"]
+                - by["lazy_p1.0"]["mean_lambda"]) < 1e-6,
+        # faster mixing -> no worse consensus error
+        "chebyshev_helps_consensus":
+            by["cheby_k3"]["final_consensus_x"]
+            <= by["cheby_k1"]["final_consensus_x"] + 1e-6,
+        # one compiled program for all six schedule points
+        "single_program":
+            len({r["sweep_group_id"] for r in rows}) == 1
+            if rows[0]["sweep_group_id"] is not None else False,
+        "grid_points": len(rows),
+    }
+
+
+if __name__ == "__main__":
+    rows = run(rounds=15)
+    for r in rows:
+        print({k: v for k, v in r.items() if k != "curves"})
+    print(check(rows))

@@ -39,10 +39,35 @@ def main() -> None:
 
     lines = ["name,us_per_call,derived"]
     results = {}
-    bench_sweep = {"quick": bool(args.quick)}
+    bench_sweep = {}
 
     def wanted(name):
         return args.only is None or name in args.only
+
+    def ratio_section(key, module, rows, rounds, grid_label, extra=None):
+        """Re-run a grid sequentially (one fresh jit per point), record the
+        sweep-vs-sequential ratio in BENCH_sweep.json under ``key`` and as a
+        CSV line.  Shared by every figure that measures the ratio."""
+        from benchmarks.common import grid_wall_s
+
+        seq_rows = module.run(rounds=rounds, sequential=True)
+        sweep_wall = grid_wall_s([r["curves"] for r in rows])
+        seq_wall = grid_wall_s([r["curves"] for r in seq_rows])
+        ratio = seq_wall / max(sweep_wall, 1e-9)
+        bench_sweep[key] = {
+            "grid": grid_label,
+            "grid_points": len(rows), "rounds": rounds,
+            **(extra or {}),
+            "sweep_wall_s": round(sweep_wall, 3),
+            "sequential_wall_s": round(seq_wall, 3),
+            "speedup": round(ratio, 3),
+            "quick": bool(args.quick),
+        }
+        lines.append(f"{key}/sweep_vs_sequential,{sweep_wall * 1e6:.1f},"
+                     f"{ratio:.2f}x (sweep {sweep_wall:.2f}s vs "
+                     f"sequential {seq_wall:.2f}s)")
+        print(lines[-1], flush=True)
+        return round(ratio, 2)
 
     def record(name, rows, check, us):
         results[name] = {"rows": _curveless(rows), "check": check}
@@ -54,30 +79,15 @@ def main() -> None:
 
     if wanted("fig3_stepsizes"):
         from benchmarks import fig3_stepsizes as m
-        from benchmarks.common import grid_wall_s
         R = 20 if args.quick else 60
         rows = m.run(rounds=R, sequential=args.sequential)
         us = np.mean([r["wall_s"] / r["iters"] for r in rows]) * 1e6
         check = m.check(rows)
         if not args.sequential:
             # same grid, same data, one fresh jit per point (legacy path)
-            seq_rows = m.run(rounds=R, sequential=True)
-            sweep_wall = grid_wall_s([r["curves"] for r in rows])
-            seq_wall = grid_wall_s([r["curves"] for r in seq_rows])
-            ratio = seq_wall / max(sweep_wall, 1e-9)
-            check["sweep_vs_sequential_speedup"] = round(ratio, 2)
-            bench_sweep["fig3_stepsizes"] = {
-                "grid": "hyperparameters (alpha, beta)",
-                "grid_points": len(rows), "rounds": R,
-                "sweep_wall_s": round(sweep_wall, 3),
-                "sequential_wall_s": round(seq_wall, 3),
-                "speedup": round(ratio, 3),
-            }
-            lines.append(f"fig3_stepsizes/sweep_vs_sequential,"
-                         f"{sweep_wall * 1e6:.1f},"
-                         f"{ratio:.2f}x (sweep {sweep_wall:.2f}s vs "
-                         f"sequential {seq_wall:.2f}s)")
-            print(lines[-1], flush=True)
+            check["sweep_vs_sequential_speedup"] = ratio_section(
+                "fig3_stepsizes", m, rows, R,
+                "hyperparameters (alpha, beta)")
         record("fig3_stepsizes", rows, check, us)
 
     if wanted("fig4_momentum"):
@@ -97,7 +107,6 @@ def main() -> None:
 
     if wanted("fig6_topology"):
         from benchmarks import fig6_topology as m
-        from benchmarks.common import grid_wall_s
         R6 = 15 if args.quick else 40
         rows = m.run(rounds=R6, sequential=args.sequential)
         us = np.mean([r["curves"]["wall_s"] / r["curves"]["iters"]
@@ -106,27 +115,35 @@ def main() -> None:
         if not args.sequential:
             # the topology grid both ways: one stacked-W program vs one
             # fresh jit per graph
-            seq_rows = m.run(rounds=R6, sequential=True)
-            sweep_wall = grid_wall_s([r["curves"] for r in rows])
-            seq_wall = grid_wall_s([r["curves"] for r in seq_rows])
-            ratio = seq_wall / max(sweep_wall, 1e-9)
-            check["sweep_vs_sequential_speedup"] = round(ratio, 2)
-            bench_sweep["fig6_topology"] = {
-                "grid": "topology (stacked dense W)",
-                "grid_points": len(rows), "rounds": R6,
-                "topologies": [r["topology"] for r in rows],
-                "spectral_lambda": {r["topology"]: round(r["lambda"], 4)
-                                    for r in rows},
-                "sweep_wall_s": round(sweep_wall, 3),
-                "sequential_wall_s": round(seq_wall, 3),
-                "speedup": round(ratio, 3),
-            }
-            lines.append(f"fig6_topology/sweep_vs_sequential,"
-                         f"{sweep_wall * 1e6:.1f},"
-                         f"{ratio:.2f}x (sweep {sweep_wall:.2f}s vs "
-                         f"sequential {seq_wall:.2f}s)")
-            print(lines[-1], flush=True)
+            check["sweep_vs_sequential_speedup"] = ratio_section(
+                "fig6_topology", m, rows, R6, "topology (stacked dense W)",
+                extra={
+                    "topologies": [r["topology"] for r in rows],
+                    "spectral_lambda": {r["topology"]: round(r["lambda"], 4)
+                                        for r in rows},
+                })
         record("fig6_topology", rows, check, us)
+
+    if wanted("fig8_timevarying"):
+        from benchmarks import fig8_timevarying as m
+        R8 = 12 if args.quick else 30
+        rows = m.run(rounds=R8, sequential=args.sequential)
+        us = np.mean([r["curves"]["wall_s"] / r["curves"]["iters"]
+                      for r in rows]) * 1e6
+        check = m.check(rows)
+        if not args.sequential:
+            # the schedule grid both ways: one stacked-schedule program vs
+            # one fresh jit per schedule point
+            check["sweep_vs_sequential_speedup"] = ratio_section(
+                "schedule_grid", m, rows, R8,
+                "communication schedule (lazy p_active x chebyshev k, "
+                "densified stacked MixSchedule)",
+                extra={
+                    "schedules": [r["schedule"] for r in rows],
+                    "mean_lambda": {r["schedule"]: round(r["mean_lambda"], 4)
+                                    for r in rows},
+                })
+        record("fig8_timevarying", rows, check, us)
 
     if wanted("fig7_speedup"):
         from benchmarks import fig7_speedup as m
@@ -150,10 +167,27 @@ def main() -> None:
         f.write("\n".join(lines) + "\n")
     print(f"\nwrote {args.out}/summary.csv")
 
-    if len(bench_sweep) > 1:  # at least one ratio measured
+    if wanted("fig8_timevarying") and args.quick and not args.sequential:
+        # CI contract: the quick run must record the schedule grid
+        assert "schedule_grid" in bench_sweep, \
+            "fig8_timevarying ran but BENCH_sweep.json gained no " \
+            "schedule_grid section"
+
+    if bench_sweep:  # at least one ratio measured
         bench_path = os.path.join(_ROOT, "BENCH_sweep.json")
+        merged = {}
+        if os.path.exists(bench_path):
+            # partial runs (--only) append/update their grids rather than
+            # dropping the sections a previous full run recorded
+            try:
+                with open(bench_path) as f:
+                    merged = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                merged = {}
+        merged.pop("quick", None)  # legacy top-level flag: now per section
+        merged.update(bench_sweep)
         with open(bench_path, "w") as f:
-            json.dump(bench_sweep, f, indent=2)
+            json.dump(merged, f, indent=2)
         print(f"wrote {bench_path}")
 
 

@@ -40,3 +40,13 @@ from repro.core.mixing import (  # noqa: F401
     stack_mixplans,
     validate_plan,
 )
+from repro.core.schedule import (  # noqa: F401
+    MixSchedule,
+    ScheduleMixer,
+    apply_schedule,
+    as_schedule,
+    as_stacked_schedule,
+    schedule_spectral_lambda,
+    stack_schedules,
+    validate_schedule,
+)

@@ -38,6 +38,7 @@ import numpy as np
 from repro.core.gossip import Mixer, identity_mixer
 from repro.core.hyper import Hyper
 from repro.core.mixing import resolve_mixer
+from repro.core.schedule import MixSchedule, ScheduleMixer, apply_schedule
 from repro.core.momentum import MomentumKind, momentum_update
 from repro.core.prox import (
     ProxOperator,
@@ -169,11 +170,25 @@ def step(
     validated at the sweep boundary (``sweep_run`` / ``local_then_comm_round``)
     to keep traced/stacked values off the per-step hot path.
 
-    ``mixer`` may be a legacy ``Mixer`` closure or a
-    :class:`repro.core.mixing.MixPlan` — the latter makes W a traced operand
-    (sweepable over stacked topologies, see ``repro.training.sweep``).
+    ``mixer`` may be a legacy ``Mixer`` closure, a
+    :class:`repro.core.mixing.MixPlan` (W as a traced operand, sweepable
+    over stacked topologies — see ``repro.training.sweep``), a
+    :class:`repro.core.schedule.MixSchedule`, or a backend-built
+    :class:`~repro.core.schedule.ScheduleMixer`.  For the round-indexed
+    forms the round this iteration belongs to is ``t // T0`` — derived from
+    the state's iteration counter, so schedules ride through ``lax.scan``
+    with no carry change.
     """
-    mixer, _plan = resolve_mixer(mixer)
+    if isinstance(mixer, (MixSchedule, ScheduleMixer)):
+        r = state.t // config.comm_period
+        if isinstance(mixer, MixSchedule):
+            sched = mixer
+            mixer = lambda tree: apply_schedule(sched, r, tree)
+        else:
+            sm = mixer
+            mixer = lambda tree: sm(tree, r)
+    else:
+        mixer, _plan = resolve_mixer(mixer)
     if hyper is None:
         config.validate()
         hp = config.hyper()
@@ -260,6 +275,11 @@ def local_then_comm_round(
     per inner iteration).  The local phase runs under ``lax.scan`` with the
     identity mixer, so no collective appears inside the scan body; the final
     step applies the real mixer.  This is the production-shaped loop.
+
+    ``mixer`` accepts everything :func:`step` does — in particular a
+    round-indexed :class:`~repro.core.schedule.MixSchedule` (or a backend's
+    ``ScheduleMixer``), whose per-round plan is selected by the comm step
+    from ``t // T0``.
     """
     T0 = config.comm_period
     if hyper is not None:

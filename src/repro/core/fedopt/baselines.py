@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core.hyper import Hyper
 from repro.core.mixing import MixPlan, apply_mix
+from repro.core.schedule import MixSchedule, apply_schedule
 from repro.core.prox import ProxOperator, family_params, get_prox, prox_apply
 
 PyTree = Any
@@ -134,8 +135,8 @@ class _Algorithm:
         if plan is not None:
             raise ValueError(
                 f"{type(self).__name__} aggregates via a server mean; a "
-                "MixPlan topology override only applies to decentralized "
-                "algorithms (dsgd)")
+                "MixPlan/MixSchedule topology override only applies to "
+                "decentralized algorithms (dsgd)")
 
     def round(self, state, batches, grad_fn, hyper: Hyper | None = None,
               plan: MixPlan | None = None):
@@ -207,27 +208,35 @@ class FedADMM(_Algorithm):
 class DSGD(_Algorithm):
     """Decentralized (prox-)SGD: x <- W prox(x - alpha g); T0 local steps.
 
-    W comes from ``cfg.W`` (a dense array or a MixPlan); passing ``plan=``
-    to ``round`` overrides it as a *traced operand*, so a stacked dense plan
-    sweeps DSGD over topologies in one compiled program just like DEPOSITUM.
+    W comes from ``cfg.W`` (a dense array, a MixPlan, or a round-indexed
+    MixSchedule); passing ``plan=`` to ``round`` overrides it as a *traced
+    operand*, so a stacked dense plan sweeps DSGD over topologies — and a
+    MixSchedule puts DSGD/DFedAvg-style baselines on the same time-varying
+    communication axis as DEPOSITUM (the round index is the state's own
+    ``t``, which DSGD advances once per round).
     """
 
     use_prox = True
 
     def __init__(self, cfg):
         super().__init__(cfg)
-        if isinstance(cfg.W, MixPlan):
+        if isinstance(cfg.W, (MixPlan, MixSchedule)):
             self.plan = cfg.W
         elif cfg.W is not None:
             self.plan = MixPlan.dense(cfg.W)
         else:
-            raise ValueError("DSGD needs a mixing matrix W (array or MixPlan)")
+            raise ValueError("DSGD needs a mixing matrix W (array, MixPlan "
+                             "or MixSchedule)")
 
     def round(self, state, batches, grad_fn, hyper: Hyper | None = None,
-              plan: MixPlan | None = None):
+              plan: MixPlan | MixSchedule | None = None):
         x = self._local_sgd(state.x, batches, grad_fn, use_prox=self.use_prox,
                             hyper=hyper)
-        x = apply_mix(plan if plan is not None else self.plan, x)
+        p = plan if plan is not None else self.plan
+        if isinstance(p, MixSchedule):
+            x = apply_schedule(p, state.t, x)
+        else:
+            x = apply_mix(p, x)
         return state._replace(x=x, t=state.t + 1), {}
 
 

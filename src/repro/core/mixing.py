@@ -17,6 +17,12 @@ into a pytree operand:
   ``lax.ppermute`` per offset inside ``shard_map`` (ring: 2, torus: 4).
 * ``complete``  — W = J: client mean (``lax.pmean`` under ``shard_map``).
 * ``identity``  — W = I: the local (no-communication) step.
+* ``chebyshev`` — P_k(W) over a dense/circulant base: ``cheby_k`` unrolled
+  applications of the base mix via the T_k recurrence (the accelerated
+  mixing protocol), with the base spectral quantity ``lam`` a traced leaf.
+
+Round-indexed (time-varying) communication builds on these plans in
+``repro.core.schedule`` (:class:`MixSchedule`).
 
 Static structure (kind, offsets) lives in pytree aux_data, so plans of the
 same kind share one traced program; the arrays are leaves.  Execution is
@@ -39,11 +45,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.topology import mixing_matrix, spectral_lambda, validate_mixing
+from repro.core.topology import (
+    chebyshev_matrix,
+    mixing_matrix,
+    spectral_lambda,
+    validate_mixing,
+)
 
 PyTree = Any
 
-_KINDS = ("dense", "circulant", "complete", "identity")
+_KINDS = ("dense", "circulant", "complete", "identity", "chebyshev")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -51,9 +62,14 @@ _KINDS = ("dense", "circulant", "complete", "identity")
 class MixPlan:
     """Mixing matrix as data: pytree leaves carry W (or circulant weights).
 
-    Build with the classmethod constructors; do not mutate.  ``kind`` and
-    ``offsets`` are static (aux_data): two plans trace to the same program
-    iff they agree on them.
+    Build with the classmethod constructors; do not mutate.  ``kind``,
+    ``offsets``, ``cheby_k`` and ``base_kind`` are static (aux_data): two
+    plans trace to the same program iff they agree on them.
+
+    The ``chebyshev`` kind wraps a *base* plan (dense or circulant leaves,
+    recorded in ``base_kind``) plus its spectral quantity ``lam`` as a
+    traced leaf; applying it unrolls ``cheby_k`` applications of the base
+    mix through the T_k recurrence — k gossip exchanges as one plan.
     """
 
     kind: str                               # static
@@ -61,18 +77,22 @@ class MixPlan:
     W: Optional[jnp.ndarray] = None         # dense: (n, n) or (S, n, n)
     weights: Optional[jnp.ndarray] = None   # circulant: (k,) or (S, k)
     self_weight: Optional[jnp.ndarray] = None  # circulant: () or (S,)
+    lam: Optional[jnp.ndarray] = None       # chebyshev: () or (S,) base lam
+    cheby_k: int = 0                        # static (chebyshev only)
+    base_kind: str = ""                     # static (chebyshev only)
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
-        return (self.W, self.weights, self.self_weight), (self.kind,
-                                                          self.offsets)
+        return ((self.W, self.weights, self.self_weight, self.lam),
+                (self.kind, self.offsets, self.cheby_k, self.base_kind))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        kind, offsets = aux
-        W, weights, self_weight = children
+        kind, offsets, cheby_k, base_kind = aux
+        W, weights, self_weight, lam = children
         return cls(kind=kind, offsets=offsets, W=W, weights=weights,
-                   self_weight=self_weight)
+                   self_weight=self_weight, lam=lam, cheby_k=cheby_k,
+                   base_kind=base_kind)
 
     # -- constructors -------------------------------------------------------
     @classmethod
@@ -90,6 +110,47 @@ class MixPlan:
     @classmethod
     def complete(cls) -> "MixPlan":
         return cls(kind="complete")
+
+    @classmethod
+    def chebyshev(cls, base: "MixPlan", k: int,
+                  n: int | None = None) -> "MixPlan":
+        """Chebyshev-accelerated plan: k base-gossip exchanges per round.
+
+        ``base`` must be an unstacked dense or circulant plan with concrete
+        (host-side) symmetric W — the spectral quantity lam = ||W - J|| is
+        computed here and rides along as a traced leaf, so stacked
+        chebyshev plans sweep like any other.  ``n`` is required for
+        circulant bases (a circulant plan does not know its ring size).
+        Rejects ``k < 1`` and non-symmetric bases outright.
+        """
+        if k < 1:
+            raise ValueError(f"MixPlan.chebyshev needs k >= 1, got k={k}")
+        if base.kind == "chebyshev":
+            raise ValueError("cannot nest chebyshev plans; raise k instead")
+        if base.is_stacked:
+            raise ValueError("build chebyshev plans per point, then "
+                             "stack_mixplans them")
+        if base.kind not in ("dense", "circulant"):
+            raise ValueError(
+                f"chebyshev base must be dense or circulant, got "
+                f"{base.kind!r} (densify with as_dense first)")
+        Wd = np.asarray(base.W if base.kind == "dense"
+                        else as_dense(base, n).W)
+        if not np.allclose(Wd, Wd.T, atol=1e-6):
+            raise ValueError("chebyshev base W must be symmetric "
+                             "(Assumption 2)")
+        lam = spectral_lambda(Wd)
+        return cls(kind="chebyshev", offsets=base.offsets, W=base.W,
+                   weights=base.weights, self_weight=base.self_weight,
+                   lam=jnp.asarray(lam, jnp.float32), cheby_k=int(k),
+                   base_kind=base.kind)
+
+    def base_plan(self) -> "MixPlan":
+        """The underlying single-exchange plan of a chebyshev plan."""
+        if self.kind != "chebyshev":
+            return self
+        return MixPlan(kind=self.base_kind, offsets=self.offsets, W=self.W,
+                       weights=self.weights, self_weight=self.self_weight)
 
     @classmethod
     def identity(cls) -> "MixPlan":
@@ -129,12 +190,16 @@ class MixPlan:
             return self.W is not None and jnp.ndim(self.W) == 3
         if self.kind == "circulant":
             return self.weights is not None and jnp.ndim(self.weights) == 2
+        if self.kind == "chebyshev":
+            return self.lam is not None and jnp.ndim(self.lam) == 1
         return False
 
     @property
     def n_sweep(self) -> int:
         if not self.is_stacked:
             return 1
+        if self.kind == "chebyshev":
+            return int(self.lam.shape[0])
         leaf = self.W if self.kind == "dense" else self.weights
         return int(leaf.shape[0])
 
@@ -154,11 +219,12 @@ def stack_mixplans(plans: Sequence[MixPlan]) -> MixPlan:
     if not plans:
         raise ValueError("need at least one MixPlan to stack")
     kinds = {p.kind for p in plans}
-    offs = {p.offsets for p in plans}
-    if len(kinds) > 1 or len(offs) > 1:
+    auxs = {(p.kind, p.offsets, p.cheby_k, p.base_kind) for p in plans}
+    if len(auxs) > 1:
         raise ValueError(
-            f"cannot stack heterogeneous plans (kinds={sorted(kinds)}); "
-            "convert to dense first (as_dense) so W is the sweep leaf")
+            f"cannot stack heterogeneous plans (kinds={sorted(kinds)}, "
+            f"{len(auxs)} distinct static structures); convert to dense "
+            "first (as_dense) so W is the sweep leaf")
     if plans[0].kind in ("complete", "identity"):
         raise ValueError(
             f"{plans[0].kind!r} plans carry no arrays to stack; "
@@ -178,6 +244,11 @@ def as_dense(plan: MixPlan, n: int | None = None) -> MixPlan:
         return MixPlan.dense(jnp.eye(n))
     if plan.kind == "complete":
         return MixPlan.dense(jnp.full((n, n), 1.0 / n))
+    if plan.kind == "chebyshev":
+        base = plan.base_plan()
+        Wd = base.W if base.kind == "dense" else as_dense(base, n).W
+        # host-side: concrete plans only (chebyshev_matrix is numpy)
+        return MixPlan.dense(chebyshev_matrix(np.asarray(Wd), plan.cheby_k))
     # circulant
     W = jnp.zeros((n, n))
     W = W + jnp.diag(jnp.full((n,), plan.self_weight))
@@ -205,18 +276,58 @@ def plan_spectral_lambda(plan: MixPlan, n: int | None = None) -> np.ndarray:
 
 
 def validate_plan(plan: MixPlan, n: int | None = None,
-                  atol: float = 1e-6) -> None:
-    """Assumption-2 checks on a concrete plan (host-side, per sweep point)."""
+                  atol: float = 1e-6, *, connected: bool = True) -> None:
+    """Assumption-2 checks on a concrete plan (host-side, per sweep point).
+
+    Chebyshev plans are validated on their densified P_k(W) with the
+    nonnegativity check relaxed (negative entries are the documented, benign
+    departure from Assumption 2).  ``connected=False`` skips the lambda < 1
+    check — used for per-round lazy matrices (Remark 3), which need not
+    contract individually.
+    """
     if plan.kind in ("complete", "identity"):
         return
     for s in range(plan.n_sweep) if plan.is_stacked else (None,):
         p = plan if s is None else plan.point(s)
-        validate_mixing(np.asarray(as_dense(p, n).W), atol=atol)
+        validate_mixing(np.asarray(as_dense(p, n).W), atol=atol,
+                        allow_negative=(p.kind == "chebyshev"),
+                        connected=connected)
 
 
 # ---------------------------------------------------------------------------
 # Stacked-clients (simulation) execution
 # ---------------------------------------------------------------------------
+
+def _chebyshev_apply(mixfn, lam, k: int, tree: PyTree) -> PyTree:
+    """P_k(W) x via the T_k recurrence: k applications of ``mixfn``.
+
+    ``mixfn`` is one application of the base mix on this backend (apply_mix
+    for stacked clients, shard_body under shard_map), so the same recurrence
+    drives both.  ``lam`` is the base plan's traced spectral scalar; the
+    lam -> 0 limit (complete graph) degenerates to a single exchange,
+    matching :func:`repro.core.topology.chebyshev_matrix`.
+    """
+    tm = jax.tree_util.tree_map
+    Wx = mixfn(tree)
+    if k == 1:
+        return Wx  # P_1(W) = W exactly
+    lam32 = jnp.asarray(lam, jnp.float32)
+    inv = 1.0 / jnp.maximum(lam32, 1e-12)
+
+    def cast(s, leaf):
+        return jnp.asarray(s, leaf.dtype)
+
+    Tm2, Tm1 = tree, tm(lambda w: cast(inv, w) * w, Wx)
+    tm2, tm1 = 1.0, inv
+    for _ in range(k - 1):
+        WT = mixfn(Tm1)
+        Tm2, Tm1 = Tm1, tm(
+            lambda w, p: 2.0 * cast(inv, w) * w - p, WT, Tm2)
+        tm2, tm1 = tm1, 2.0 * inv * tm1 - tm2
+    accelerate = lam32 > 1e-9
+    return tm(lambda tk, wx: jnp.where(accelerate, tk / cast(tm1, tk), wx),
+              Tm1, Wx)
+
 
 def apply_mix(plan: MixPlan, tree: PyTree) -> PyTree:
     """x_i <- sum_j W_ij x_j on the leading client dim of every leaf.
@@ -229,6 +340,10 @@ def apply_mix(plan: MixPlan, tree: PyTree) -> PyTree:
     tm = jax.tree_util.tree_map
     if plan.kind == "identity":
         return tree
+    if plan.kind == "chebyshev":
+        base = plan.base_plan()
+        return _chebyshev_apply(lambda t: apply_mix(base, t), plan.lam,
+                                plan.cheby_k, tree)
     if plan.kind == "complete":
         return tm(lambda x: jnp.broadcast_to(jnp.mean(x, axis=0,
                                                       keepdims=True),
@@ -283,10 +398,17 @@ def shard_body(plan: MixPlan, x_blk: jnp.ndarray, axis_name,
     * circulant — one ``lax.ppermute`` per offset (bytes ~ deg/n of dense).
     * dense     — ``all_gather`` + local contraction with this shard's W
       rows; W rides in via closure (replicated) or pre-sharded rows.
+    * chebyshev — ``cheby_k`` unrolled applications of the base kind's
+      collective (k ppermute rounds for a circulant base).
     * identity  — no-op.
     """
     if plan.kind == "identity":
         return x_blk
+    if plan.kind == "chebyshev":
+        base = plan.base_plan()
+        return _chebyshev_apply(
+            lambda blk: shard_body(base, blk, axis_name, n),
+            plan.lam, plan.cheby_k, x_blk)
     if plan.kind == "complete":
         # mean within the local client block, then across shards: the global
         # client mean for any equal block size (blk == 1: plain pmean)

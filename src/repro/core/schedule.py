@@ -1,0 +1,498 @@
+"""Round-indexed communication: the :class:`MixSchedule` pytree.
+
+PR 2 made the mixing matrix a traced operand (:class:`~repro.core.mixing.
+MixPlan`), but one *static* plan per run — every round communicated the
+same way.  The paper's Remark 3 analyzes DEPOSITUM over **time-varying**
+networks (each round only a random subgraph participates), and balancing
+communication against computation round-by-round is exactly the knob the
+related DFL literature turns (Liu et al.'s cost balancing, DFedAvg's
+multi-gossip).  A :class:`MixSchedule` promotes the communication pattern
+to a *round-indexed* operand that is scanned alongside the batches:
+
+* ``constant``    — one plan for every round.  Executes exactly the ops of
+  the static-plan path (bit-exact with PR 2 trajectories).
+* ``stacked``     — plan leaves carry a leading round axis ``(R, ...)``;
+  round ``r`` uses ``plan[r]`` (clamped at R-1 past the end).
+* ``lazy(p, rng)``— Remark 3 partial participation: a pre-drawn ``(R, n)``
+  0/1 ``active`` mask; round ``r`` applies the lazy-subgraph matrix of the
+  base plan (inactive mass folds into the diagonal).  Executed natively:
+  a masked contraction for dense bases, per-offset masked rolls /
+  ``ppermute``\\ s for circulant bases — never by materialising W^t on the
+  host.
+* ``chebyshev(k)``— a constant schedule over a
+  :meth:`MixPlan.chebyshev <repro.core.mixing.MixPlan.chebyshev>` plan:
+  every round runs k accelerated gossip exchanges as one plan.
+* ``alternating`` — cycles through a period-P stack of plans
+  (``plan[r % P]``): the communication/computation trade studied by
+  multi-local-step gossip methods.
+
+Static structure (schedule kind, period, the plan's kind/offsets/cheby_k)
+lives in aux_data; all arrays are leaves.  Like plans, schedules stack on
+a leading **sweep** axis (:func:`stack_schedules`) and then vmap through
+the sweep engine — ``p_active`` grids share one compiled program, and
+heterogeneous grids (lazy x chebyshev) densify to a universal per-round
+``stacked`` form first (:func:`as_stacked_schedule`).
+
+Execution is split per backend exactly like plans:
+
+* :func:`apply_schedule`      — stacked-clients simulation semantics.
+* :func:`shard_schedule_body` — per-shard semantics inside ``shard_map``
+  (a lazy round masks each ppermute/all_gather contribution by the
+  active-edge value; a chebyshev round unrolls k collectives).
+
+The round index ``r`` is derived by the round program from the iteration
+counter (``state.t // T0``), so schedules thread through ``lax.scan``
+without any API change to the scan carry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mixing import (
+    MixPlan,
+    apply_mix,
+    as_dense,
+    shard_body,
+    stack_mixplans,
+    validate_plan,
+)
+from repro.core.topology import (
+    lazy_subgraph_matrix,
+    spectral_lambda,
+    validate_mixing,
+)
+
+PyTree = Any
+
+_SCHEDULE_KINDS = ("constant", "stacked", "lazy", "chebyshev", "alternating")
+
+
+def _plan_extra_ndim(plan: MixPlan) -> int:
+    """Leaf dims beyond the base rank (0 = plain, 1 = one extra axis, ...)."""
+    if plan.kind == "chebyshev":
+        # lam is the one leaf every chebyshev plan carries (W is None for
+        # circulant bases); its base rank is 0
+        return jnp.ndim(plan.lam)
+    if plan.kind == "dense":
+        return jnp.ndim(plan.W) - 2
+    if plan.kind == "circulant":
+        return jnp.ndim(plan.weights) - 1
+    return 0
+
+
+def _plan_lead_leaf(plan: MixPlan):
+    """The leaf whose leading axes carry a plan's sweep/round stacking."""
+    if plan.kind == "chebyshev":
+        return plan.lam
+    return plan.W if plan.kind == "dense" else plan.weights
+
+
+def _point_traced(plan: MixPlan, idx) -> MixPlan:
+    """Select one leading-axis point of a plan with a *traced* index."""
+    return jax.tree_util.tree_map(
+        lambda v: jnp.take(v, idx, axis=0, mode="clip"), plan)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class MixSchedule:
+    """Round-indexed communication pattern as a scanned operand.
+
+    Build with the classmethod constructors.  ``kind`` and ``period`` are
+    static; ``plan`` (a sub-pytree) and ``active`` are leaves.
+    """
+
+    kind: str                                # static
+    plan: MixPlan                            # base / round-stacked plan
+    active: Optional[jnp.ndarray] = None     # lazy: (R, n) or (S, R, n)
+    period: int = 0                          # static (alternating only)
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.plan, self.active), (self.kind, self.period)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kind, period = aux
+        plan, active = children
+        return cls(kind=kind, plan=plan, active=active, period=period)
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def constant(cls, plan: MixPlan) -> "MixSchedule":
+        """The PR 2 static-plan behaviour as a schedule (bit-exact)."""
+        if plan.is_stacked:
+            raise ValueError(
+                "constant schedules take an unstacked plan; use "
+                "MixSchedule.stacked for a per-round stack, or "
+                "stack_schedules for a sweep axis")
+        return cls(kind="constant", plan=plan)
+
+    @classmethod
+    def stacked(cls, plans) -> "MixSchedule":
+        """Per-round plans: a list of same-kind plans or an already-stacked
+        plan whose leading leaf axis is the round axis."""
+        plan = plans if isinstance(plans, MixPlan) else stack_mixplans(
+            list(plans))
+        if _plan_extra_ndim(plan) != 1:
+            raise ValueError("stacked schedules need plan leaves with one "
+                             "leading (rounds) axis")
+        return cls(kind="stacked", plan=plan)
+
+    @classmethod
+    def alternating(cls, plans: Sequence[MixPlan]) -> "MixSchedule":
+        """Cycle through ``plans``: round r communicates with plan[r % P]."""
+        plans = list(plans)
+        if len(plans) < 2:
+            raise ValueError("alternating schedules need >= 2 plans "
+                             "(use constant for one)")
+        return cls(kind="alternating", plan=stack_mixplans(plans),
+                   period=len(plans))
+
+    @classmethod
+    def lazy(cls, plan: MixPlan, p_active: float, rounds: int, *,
+             n: int | None = None, seed: int = 0,
+             rng: np.random.Generator | None = None) -> "MixSchedule":
+        """Remark 3 partial participation over ``plan``'s graph.
+
+        Each round an i.i.d. Bernoulli(``p_active``) subset of clients is
+        active; only edges with BOTH endpoints active communicate, the rest
+        of the mass folds into the diagonal (``lazy_subgraph_matrix``
+        semantics, executed natively in-trace).  The mask is drawn here,
+        host-side, so runs are reproducible; ``p_active=1.0`` reproduces
+        the base plan exactly.  ``n`` is required for circulant bases.
+        """
+        if not 0.0 <= p_active <= 1.0:
+            raise ValueError(f"p_active must be in [0, 1], got {p_active}")
+        if rounds < 1:
+            raise ValueError(f"lazy schedules need rounds >= 1, got {rounds}")
+        if plan.is_stacked:
+            raise ValueError("lazy schedules take an unstacked base plan")
+        if plan.kind not in ("dense", "circulant"):
+            if n is None:
+                raise ValueError(f"lazy over a {plan.kind!r} plan needs n "
+                                 "to densify")
+            plan = as_dense(plan, n)
+        if plan.kind == "dense":
+            n = int(plan.W.shape[-1])
+        elif n is None:
+            raise ValueError("lazy over a circulant plan needs n")
+        rng = rng if rng is not None else np.random.default_rng(seed)
+        mask = rng.random((rounds, n)) < p_active
+        return cls(kind="lazy", plan=plan,
+                   active=jnp.asarray(mask, jnp.float32))
+
+    @classmethod
+    def chebyshev(cls, base: MixPlan, k: int,
+                  n: int | None = None) -> "MixSchedule":
+        """Every round = k Chebyshev-accelerated exchanges over ``base``."""
+        if base.kind == "chebyshev":
+            if base.cheby_k != k:
+                raise ValueError(
+                    f"base plan already runs k={base.cheby_k} chebyshev "
+                    f"exchanges; refusing to silently ignore k={k} "
+                    "(pass the raw base plan instead)")
+            plan = base
+        else:
+            plan = MixPlan.chebyshev(base, k, n=n)
+        return cls(kind="chebyshev", plan=plan)
+
+    @classmethod
+    def from_topology(cls, topology: str, n: int, **kwargs) -> "MixSchedule":
+        """Constant schedule for a named topology (sugar)."""
+        return cls.constant(MixPlan.from_topology(topology, n, **kwargs))
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def is_stacked(self) -> bool:
+        """True when the schedule carries a leading *sweep* axis (the round
+        axis of ``stacked``/``alternating``/``lazy`` kinds is one level
+        in)."""
+        if self.kind == "lazy":
+            return self.active is not None and jnp.ndim(self.active) == 3
+        extra = _plan_extra_ndim(self.plan)
+        return extra == (2 if self.kind in ("stacked", "alternating")
+                         else 1)
+
+    @property
+    def n_sweep(self) -> int:
+        if not self.is_stacked:
+            return 1
+        if self.kind == "lazy":
+            return int(self.active.shape[0])
+        return int(_plan_lead_leaf(self.plan).shape[0])
+
+    @property
+    def n_rounds(self) -> Optional[int]:
+        """Length of the round axis (None for round-invariant kinds).
+
+        Rounds past the end clamp to the last entry (``alternating`` wraps
+        with its period instead).
+        """
+        if self.kind in ("constant", "chebyshev", "alternating"):
+            return None
+        if self.kind == "lazy":
+            return int(self.active.shape[-2])
+        leaf = _plan_lead_leaf(self.plan)
+        return int(leaf.shape[1] if self.is_stacked else leaf.shape[0])
+
+    def point(self, s: int) -> "MixSchedule":
+        """Select one sweep point (identity on unswept schedules)."""
+        if not self.is_stacked:
+            return self
+        return jax.tree_util.tree_map(lambda v: v[s], self)
+
+    def _round_index(self, r):
+        r = jnp.asarray(r, jnp.int32)
+        if self.kind == "alternating":
+            return jnp.mod(r, self.period)
+        return r  # stacked/lazy clamp via take(mode="clip")
+
+    def plan_at(self, r: int) -> MixPlan:
+        """Host-side concrete effective plan for round ``r`` (unswept
+        schedules only) — the reference the traced paths are tested
+        against, and the validation/λ-reporting form."""
+        if self.is_stacked:
+            raise ValueError("select a sweep point first (schedule.point)")
+        if self.kind in ("constant", "chebyshev"):
+            return self.plan
+        if self.kind == "alternating":
+            return self.plan.point(int(r) % self.period)
+        if self.kind == "stacked":
+            return self.plan.point(min(int(r), self.n_rounds - 1))
+        # lazy: fold this round's inactive mass into the diagonal
+        r = min(int(r), self.n_rounds - 1)
+        base = self.plan if self.plan.kind == "dense" else as_dense(
+            self.plan, int(self.active.shape[-1]))
+        Wt = lazy_subgraph_matrix(np.asarray(base.W),
+                                  np.asarray(self.active[r]) > 0.5)
+        return MixPlan.dense(Wt)
+
+
+# ---------------------------------------------------------------------------
+# Stacked-clients (simulation) execution
+# ---------------------------------------------------------------------------
+
+def _lazy_dense_matrix(W: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """In-trace lazy-subgraph matrix: W masked by the active-edge outer
+    product, inactive mass folded into the diagonal (Remark 3)."""
+    mask = a[:, None] * a[None, :]
+    off = W * mask.astype(W.dtype)
+    off = off - jnp.diag(jnp.diag(off))
+    return off + jnp.diag(1.0 - jnp.sum(off, axis=1))
+
+
+def _apply_lazy(plan: MixPlan, a: jnp.ndarray, tree: PyTree) -> PyTree:
+    """One lazy round on stacked clients: dense masked contraction or
+    per-offset masked rolls for circulant bases."""
+    tm = jax.tree_util.tree_map
+    if plan.kind == "dense":
+        Wt = _lazy_dense_matrix(plan.W, a)
+
+        def leaf(x):
+            return jnp.einsum("ij,j...->i...", Wt.astype(x.dtype), x,
+                              precision=jax.lax.Precision.HIGHEST)
+
+        return tm(leaf, tree)
+    # circulant: out_i = x_i + sum_k w_k a_i a_{i+off_k} (x_{i+off_k} - x_i)
+    ws = plan.weights
+
+    def leaf(x):
+        out = x
+        for k, off in enumerate(plan.offsets):
+            m = a * jnp.roll(a, -off)
+            m = m.reshape(m.shape + (1,) * (x.ndim - 1)).astype(x.dtype)
+            out = out + ws[k].astype(x.dtype) * m * (
+                jnp.roll(x, -off, axis=0) - x)
+        return out
+
+    return tm(leaf, tree)
+
+
+def apply_schedule(sched: MixSchedule, r, tree: PyTree) -> PyTree:
+    """Round ``r``'s mix on the leading client dim of every leaf.
+
+    ``r`` may be a Python int or a traced int32 scalar (the scan path).  A
+    ``constant`` schedule executes exactly ``apply_mix(plan, tree)`` — no
+    extra selects — so static-plan trajectories are reproduced bit-exactly.
+    """
+    if sched.kind in ("constant", "chebyshev"):
+        return apply_mix(sched.plan, tree)
+    if sched.kind in ("stacked", "alternating"):
+        return apply_mix(_point_traced(sched.plan, sched._round_index(r)),
+                         tree)
+    # lazy
+    a = jnp.take(sched.active, sched._round_index(r), axis=0, mode="clip")
+    return _apply_lazy(sched.plan, a, tree)
+
+
+def as_schedule(mixer_or_plan) -> "MixSchedule":
+    """Normalise a plan to a constant schedule (identity on schedules)."""
+    if isinstance(mixer_or_plan, MixSchedule):
+        return mixer_or_plan
+    if isinstance(mixer_or_plan, MixPlan):
+        return MixSchedule.constant(mixer_or_plan)
+    raise TypeError(f"cannot build a MixSchedule from "
+                    f"{type(mixer_or_plan).__name__}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleMixer:
+    """A round-indexed mixer: ``mix(tree, r) -> tree``.
+
+    Built by the execution backends; the round program recognises it and
+    supplies ``r = t // T0`` from the iteration counter.  (A plain Mixer
+    closure stays ``mix(tree) -> tree``.)
+    """
+
+    fn: Callable[[PyTree, Any], PyTree]
+    schedule: MixSchedule
+
+    def __call__(self, tree: PyTree, r) -> PyTree:
+        return self.fn(tree, r)
+
+
+# ---------------------------------------------------------------------------
+# Per-shard (shard_map) execution
+# ---------------------------------------------------------------------------
+
+def shard_schedule_body(sched: MixSchedule, r, x_blk: jnp.ndarray,
+                        axis_name, n: int) -> jnp.ndarray:
+    """Round ``r``'s mix for one leaf block inside ``shard_map``.
+
+    Dispatch mirrors :func:`repro.core.mixing.shard_body` per plan kind;
+    the schedule adds:
+
+    * ``stacked``/``alternating`` — the round's plan leaves are gathered
+      from the (replicated) stacked operand, then mixed as usual.
+    * ``lazy`` + dense base — the in-trace lazy matrix masks the
+      all_gather contraction's rows.
+    * ``lazy`` + circulant base — each ``ppermute`` contribution is masked
+      by its active-edge value ``a_i * a_{(i+off) % n}`` (needs one client
+      per device, like all circulant shard plans).
+    * ``chebyshev`` — k unrolled collectives via the plan's shard dispatch.
+    """
+    if sched.kind in ("constant", "chebyshev"):
+        return shard_body(sched.plan, x_blk, axis_name, n)
+    if sched.kind in ("stacked", "alternating"):
+        plan_r = _point_traced(sched.plan, sched._round_index(r))
+        return shard_body(plan_r, x_blk, axis_name, n)
+    # lazy
+    a = jnp.take(sched.active, sched._round_index(r), axis=0, mode="clip")
+    plan = sched.plan
+    if plan.kind == "dense":
+        Wt = _lazy_dense_matrix(plan.W, a)
+        return shard_body(MixPlan.dense(Wt), x_blk, axis_name, n)
+    # circulant: mask each ppermute contribution by the active-edge value
+    idx = jax.lax.axis_index(axis_name)
+    a_i = jnp.take(a, idx, mode="clip")
+    out = x_blk
+    for k, off in enumerate(plan.offsets):
+        perm = [((s + off) % n, s) for s in range(n)]
+        nb = jax.lax.ppermute(x_blk, axis_name, perm)
+        a_nb = jnp.take(a, jnp.mod(idx + off, n), mode="clip")
+        m = (a_i * a_nb).astype(x_blk.dtype)
+        out = out + plan.weights[k].astype(x_blk.dtype) * m * (nb - x_blk)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sweep plumbing: schedules as a sweep dimension
+# ---------------------------------------------------------------------------
+
+def stack_schedules(schedules: Sequence[MixSchedule]) -> MixSchedule:
+    """Stack same-structure schedules on a new leading sweep axis.
+
+    All schedules must agree on kind, period, and the plan's static
+    structure (so e.g. a ``p_active`` grid of lazy schedules over one graph
+    stacks directly).  Grids that mix schedule kinds — or chebyshev orders,
+    which are static — must densify to a common per-round ``stacked`` form
+    first: ``stack_schedules([as_stacked_schedule(s, rounds, n) ...])``.
+    """
+    schedules = list(schedules)
+    if not schedules:
+        raise ValueError("need at least one MixSchedule to stack")
+    auxs = {(s.kind, s.period, s.plan.kind, s.plan.offsets, s.plan.cheby_k,
+             s.plan.base_kind) for s in schedules}
+    if len(auxs) > 1:
+        raise ValueError(
+            f"cannot stack heterogeneous schedules ({len(auxs)} distinct "
+            "static structures); densify to a common per-round form first "
+            "(as_stacked_schedule)")
+    if any(s.is_stacked for s in schedules):
+        raise ValueError("schedules are already sweep-stacked")
+    if schedules[0].plan.kind in ("complete", "identity"):
+        raise ValueError(
+            f"{schedules[0].plan.kind!r} plans carry no arrays to stack; "
+            "densify first (as_stacked_schedule / as_dense)")
+    return jax.tree_util.tree_map(lambda *vs: jnp.stack(vs), *schedules)
+
+
+def as_stacked_schedule(sched: MixSchedule, rounds: int,
+                        n: int | None = None) -> MixSchedule:
+    """Densified universal sweep form: per-round dense W of shape (R, n, n).
+
+    Host-side (concrete schedules only).  Any schedule kind — including
+    chebyshev orders, whose k is static — reduces to this form, so
+    heterogeneous schedule grids stack into one compiled program.
+    """
+    if sched.is_stacked:
+        raise ValueError("as_stacked_schedule expects an unswept schedule")
+    Ws = np.stack([np.asarray(as_dense(sched.plan_at(r), n).W)
+                   for r in range(rounds)])
+    return MixSchedule(kind="stacked", plan=MixPlan.dense(Ws))
+
+
+def validate_schedule(sched: MixSchedule, n: int | None = None,
+                      atol: float = 1e-6, rounds: int | None = None) -> None:
+    """Assumption-2 checks per sweep point, per distinct round (host-side).
+
+    Round-varying kinds (stacked/lazy/alternating) are allowed
+    non-contracting matrices in isolation — time-varying networks only need
+    *joint* connectivity (Remark 3: contraction in expectation) — while a
+    round-invariant plan (constant/chebyshev) that never contracts would
+    never mix at all and is rejected.  Chebyshev plans — and stacked /
+    alternating rounds, which may be densified chebyshev matrices — are
+    allowed negative entries (symmetry + rows summing to one is the
+    invariant that keeps the tracking identity alive); lazy masks of a
+    nonnegative base stay nonnegative by construction and are checked
+    strictly.
+    """
+    for s in range(sched.n_sweep) if sched.is_stacked else (None,):
+        ss = sched if s is None else sched.point(s)
+        if ss.kind in ("constant", "chebyshev"):
+            R = 1
+        elif ss.kind == "alternating":
+            R = ss.period
+        else:
+            R = ss.n_rounds if rounds is None else min(rounds, ss.n_rounds)
+        for r in range(R):
+            plan_r = ss.plan_at(r)
+            if ss.kind in ("stacked", "alternating"):
+                validate_mixing(np.asarray(as_dense(plan_r, n).W),
+                                atol=atol, allow_negative=True,
+                                connected=False)
+            else:
+                validate_plan(plan_r, n, atol=atol,
+                              connected=(ss.kind in ("constant",
+                                                     "chebyshev")))
+
+
+def schedule_spectral_lambda(sched: MixSchedule, n: int | None = None,
+                             rounds: int = 1) -> np.ndarray:
+    """Per-round lambda = ||W^t - J|| over the first ``rounds`` rounds.
+
+    Returns (rounds,) for unswept schedules, (S, rounds) for swept ones.
+    Host-side, concrete schedules only.
+    """
+    if sched.is_stacked:
+        return np.stack([schedule_spectral_lambda(sched.point(s), n, rounds)
+                         for s in range(sched.n_sweep)])
+    return np.asarray([
+        spectral_lambda(np.asarray(as_dense(sched.plan_at(r), n).W))
+        for r in range(rounds)])

@@ -112,18 +112,29 @@ def spectral_lambda(W: np.ndarray) -> float:
     return float(np.linalg.norm(W - J, ord=2))
 
 
-def validate_mixing(W: np.ndarray, atol: float = 1e-10) -> None:
-    """Assert Assumption 2 holds."""
+def validate_mixing(W: np.ndarray, atol: float = 1e-10, *,
+                    allow_negative: bool = False,
+                    connected: bool = True) -> None:
+    """Assert Assumption 2 holds.
+
+    ``allow_negative=True`` relaxes the nonnegativity check (Chebyshev
+    polynomials P_k(W) legitimately carry negative entries).
+    ``connected=False`` skips the lambda < 1 contraction check — a lazy
+    (Remark 3) per-round matrix may be non-contracting on its own (in the
+    extreme, W^t = I when nobody participates); only the *expected* matrix
+    must contract.
+    """
     n = W.shape[0]
     if not np.allclose(W, W.T, atol=atol):
         raise ValueError("W not symmetric")
     if not np.allclose(W.sum(axis=1), 1.0, atol=atol):
         raise ValueError("W rows do not sum to 1")
-    if np.any(W < -atol):
+    if not allow_negative and np.any(W < -atol):
         raise ValueError("W has negative entries")
-    lam = spectral_lambda(W)
-    if n > 1 and not lam < 1.0:
-        raise ValueError(f"graph appears disconnected: lambda={lam}")
+    if connected:
+        lam = spectral_lambda(W)
+        if n > 1 and not lam < 1.0:
+            raise ValueError(f"graph appears disconnected: lambda={lam}")
 
 
 def chebyshev_matrix(W: np.ndarray, k: int) -> np.ndarray:
@@ -137,10 +148,24 @@ def chebyshev_matrix(W: np.ndarray, k: int) -> np.ndarray:
     tracking identity survives) but may have negative entries — a known,
     benign departure from Assumption 2's nonnegativity (cf. Scaman et al.
     2017, optimal decentralized algorithms).
+
+    ``k < 1`` and non-symmetric ``W`` are rejected: the T_k recurrence is
+    only the optimal polynomial for symmetric W, and a k = 0 "plan" is not
+    a communication round at all.
     """
+    W = np.asarray(W)
+    if k < 1:
+        raise ValueError(f"chebyshev_matrix needs k >= 1, got k={k}")
+    if W.ndim != 2 or W.shape[0] != W.shape[1]:
+        raise ValueError(f"chebyshev_matrix needs a square W, got {W.shape}")
+    if not np.allclose(W, W.T, atol=1e-8):
+        raise ValueError("chebyshev_matrix needs a symmetric W "
+                         "(Assumption 2); got a non-symmetric matrix")
     n = W.shape[0]
     lam = spectral_lambda(W)
-    if lam < 1e-12 or k <= 1:
+    if lam < 1e-12 or k == 1:
+        # P_1(W) = W exactly; lam -> 0 is the complete-graph limit where
+        # acceleration has nothing left to accelerate
         return W.copy()
     inv = 1.0 / lam
     # T_k recurrence evaluated at W/lam (matrix) and at 1/lam (scalar)

@@ -23,7 +23,10 @@ from typing import Any
 import jax
 from jax.experimental.shard_map import shard_map
 
+import jax.numpy as jnp
+
 from repro.core.mixing import MixPlan, shard_body
+from repro.core.schedule import MixSchedule, ScheduleMixer, shard_schedule_body
 from repro.launch.sharding import Placement, spec_for
 from repro.models.common import is_axes_leaf
 
@@ -50,6 +53,9 @@ def make_shardmap_mixer(placement: Placement, axes_tree: Any,
     ShardMapBackend runs, so the launch path and the sweep path cannot
     drift apart.
     """
+    if isinstance(plan, MixSchedule):
+        return make_shardmap_schedule_mixer(placement, axes_tree,
+                                            shapes_tree, plan)
     mesh = placement.mesh
     caxes = placement.clients_axes
     n = placement.n_clients
@@ -77,6 +83,50 @@ def make_shardmap_mixer(placement: Placement, axes_tree: Any,
         return jax.tree_util.tree_unflatten(treedef, out_leaves)
 
     return mix
+
+
+def make_shardmap_schedule_mixer(placement: Placement, axes_tree: Any,
+                                 shapes_tree: Any, schedule: MixSchedule):
+    """Round-indexed placement mixer: ``mix(tree, r)`` inside shard_map.
+
+    The per-round dispatch (lazy rounds mask each ppermute/all_gather
+    contribution by the active-edge vector, Chebyshev rounds unroll their k
+    collectives, stacked/alternating rounds gather the round's plan
+    operand) is :func:`repro.core.schedule.shard_schedule_body` — shared
+    with the generic ``ShardMapBackend``, so the launch path and the sweep
+    engine execute time-varying communication identically.  The round
+    program supplies ``r = t // T0`` (``repro.core.depositum.step`` does
+    this for any ``ScheduleMixer``).
+    """
+    mesh = placement.mesh
+    caxes = placement.clients_axes
+    n = placement.n_clients
+    if n <= 1 or not caxes:
+        return ScheduleMixer(lambda tree, r: tree, schedule)
+
+    axis_name = caxes if len(caxes) > 1 else caxes[0]
+
+    specs = jax.tree_util.tree_map(
+        lambda a, s: spec_for(placement, tuple(a), s.shape),
+        axes_tree, shapes_tree, is_leaf=is_axes_leaf,
+    )
+
+    def mix(tree, r):
+        rr = jnp.asarray(r, jnp.int32)
+        flat, treedef = jax.tree_util.tree_flatten(tree)
+        flat_specs = treedef.flatten_up_to(specs)
+
+        out_leaves = []
+        for leaf, spec in zip(flat, flat_specs):
+            fn = shard_map(
+                lambda blk: shard_schedule_body(schedule, rr, blk,
+                                                axis_name, n),
+                mesh=mesh, in_specs=(spec,), out_specs=spec,
+            )
+            out_leaves.append(fn(leaf))
+        return jax.tree_util.tree_unflatten(treedef, out_leaves)
+
+    return ScheduleMixer(mix, schedule)
 
 
 def make_shardmap_ring_mixer(placement: Placement, axes_tree: Any,

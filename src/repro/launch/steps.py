@@ -19,6 +19,7 @@ from repro.configs.base import ModelConfig
 from repro.core import DepositumConfig, identity_mixer
 from repro.core.depositum import step as depositum_step
 from repro.core.mixing import MixPlan
+from repro.core.schedule import MixSchedule
 from repro.models.registry import Model
 from repro.training.backends import ExecutionBackend, StackedVmapBackend
 
@@ -73,19 +74,25 @@ def build_train_step(
     microbatch: int = 1,
     plan: MixPlan | None = None,
     backend: ExecutionBackend | None = None,
+    schedule: MixSchedule | None = None,
 ):
     """(state, batch) -> (state, aux); batch leaves (n, B, ...).
 
     Mixing resolves in priority order: an explicit ``mixer`` closure (e.g. a
-    placement-aware shard_map mixer from ``launch.gossip_dist``), else a
-    ``plan``/``topology`` executed by ``backend`` (default stacked-vmap:
+    placement-aware shard_map mixer from ``launch.gossip_dist`` — including
+    its round-indexed ``ScheduleMixer``), else a round-indexed ``schedule``
+    (:class:`~repro.core.schedule.MixSchedule`), else a
+    ``plan``/``topology`` — executed by ``backend`` (default stacked-vmap:
     dense contraction, which GSPMD lowers to all-gather + local einsum on a
-    sharded client axis).
+    sharded client axis).  Schedules derive their round from the state's
+    iteration counter (``t // T0``) inside ``depositum.step``.
     """
     if mixer is None:
-        if plan is None:
-            plan = MixPlan.from_topology(topology, n_clients)
-        mixer = (backend or StackedVmapBackend()).mixer_for(plan)
+        operand = schedule
+        if operand is None:
+            operand = (plan if plan is not None
+                       else MixPlan.from_topology(topology, n_clients))
+        mixer = (backend or StackedVmapBackend()).mixer_for(operand)
     grad_fn = make_grad_fn(model, microbatch=microbatch)
 
     def train_step(state, batch):

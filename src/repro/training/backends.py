@@ -34,8 +34,22 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.mixing import MixPlan, as_mixer, shard_body
+from repro.core.schedule import (
+    MixSchedule,
+    ScheduleMixer,
+    apply_schedule,
+    shard_schedule_body,
+)
 
 Mixer = Callable[[Any], Any]
+
+
+def _plan_kind(plan_or_schedule) -> str:
+    """Effective collective kind: a schedule's base plan, a chebyshev
+    plan's base — the thing that decides ppermute vs all_gather."""
+    plan = (plan_or_schedule.plan if isinstance(plan_or_schedule, MixSchedule)
+            else plan_or_schedule)
+    return plan.base_kind if plan.kind == "chebyshev" else plan.kind
 
 
 @runtime_checkable
@@ -50,11 +64,19 @@ class ExecutionBackend(Protocol):
 
 @dataclasses.dataclass(frozen=True)
 class StackedVmapBackend:
-    """Simulation semantics: leading client dim, jnp-only mixing."""
+    """Simulation semantics: leading client dim, jnp-only mixing.
+
+    ``mixer_for`` accepts a :class:`MixPlan` (returns a plain Mixer) or a
+    round-indexed :class:`MixSchedule` (returns a ``ScheduleMixer`` —
+    ``mix(tree, r)`` — which the round program drives from ``t // T0``).
+    """
 
     name: str = dataclasses.field(default="stacked-vmap", init=False)
 
-    def mixer_for(self, plan: MixPlan) -> Mixer:
+    def mixer_for(self, plan) -> Mixer:
+        if isinstance(plan, MixSchedule):
+            return ScheduleMixer(
+                lambda tree, r: apply_schedule(plan, r, tree), plan)
         return as_mixer(plan)
 
 
@@ -81,19 +103,25 @@ class ShardMapBackend:
             return size
         return self.mesh.shape[self.axis_name]
 
-    def mixer_for(self, plan: MixPlan) -> Mixer:
-        if plan.kind == "identity":
-            return lambda tree: tree
+    def _check_plan(self, plan) -> tuple[int, int]:
         size = self._axis_size()
         n = self.n_clients or size
         if n % size != 0:
             raise ValueError(
                 f"n_clients={n} not divisible by mesh axis "
                 f"{self.axis_name!r} of size {size}")
-        if plan.kind == "circulant" and n != size:
+        if _plan_kind(plan) == "circulant" and n != size:
             raise ValueError(
                 "circulant (ppermute) plans need one client per device; "
                 f"got n_clients={n} on a {size}-way axis — use a dense plan")
+        return size, n
+
+    def mixer_for(self, plan) -> Mixer:
+        if isinstance(plan, MixSchedule):
+            return self._schedule_mixer(plan)
+        if plan.kind == "identity":
+            return lambda tree: tree
+        size, _n = self._check_plan(plan)
         spec_axis = self.axis_name
 
         def mix(tree):
@@ -108,6 +136,29 @@ class ShardMapBackend:
             return jax.tree_util.tree_map(leaf, tree)
 
         return mix
+
+    def _schedule_mixer(self, sched: MixSchedule) -> Mixer:
+        """Round-indexed mixer: per-round ``shard_body`` variants (masked
+        ppermute/all_gather for lazy rounds, unrolled collectives for
+        chebyshev) inside one ``shard_map`` per leaf."""
+        size, _n = self._check_plan(sched)
+        spec_axis = self.axis_name
+
+        def mix(tree, r):
+            rr = jnp.asarray(r, jnp.int32)
+
+            def leaf(x):
+                spec = P(spec_axis)
+                fn = shard_map(
+                    lambda blk: shard_schedule_body(sched, rr, blk,
+                                                    spec_axis, size),
+                    mesh=self.mesh, in_specs=(spec,), out_specs=spec,
+                )
+                return fn(x)
+
+            return jax.tree_util.tree_map(leaf, tree)
+
+        return ScheduleMixer(mix, sched)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,6 +185,46 @@ class SweepBackend:
         return sweep_run(params0, grad_fn, config, mixer, hypers, batches,
                          n_clients=n_clients, metrics_fn=metrics_fn,
                          batch_axis=batch_axis, backend=self.inner)
+
+
+def suggest_backend_name(kind: str, n_clients: int, n_devices: int) -> str:
+    """Pure decision rule for :func:`suggest_backend` (testable host-side).
+
+    * circulant (incl. chebyshev-over-circulant) plans want the ppermute
+      path, which needs exactly one client per device;
+    * dense/complete plans want the all_gather/pmean path whenever the
+      device count divides the client count;
+    * anything else (single device, indivisible counts, identity) runs the
+      stacked-vmap simulation.
+    """
+    if n_devices > 1 and n_clients > 1:
+        if kind == "circulant":
+            return "shard_map" if n_devices == n_clients else "stacked-vmap"
+        if kind in ("dense", "complete") and n_clients % n_devices == 0:
+            return "shard_map"
+    return "stacked-vmap"
+
+
+def suggest_backend(plan_or_schedule, n_clients: int, *,
+                    devices=None, axis_name: str = "clients"
+                    ) -> ExecutionBackend:
+    """Pick the execution backend from the plan's sparsity and the host.
+
+    The last PR 2 follow-up: callers (``FederatedTrainer`` by default) no
+    longer hand-pick a mesh — a circulant plan gets the ppermute shard_map
+    path when one device per client exists, a dense/complete plan gets the
+    all_gather/pmean path when the device count divides ``n_clients``, and
+    everything else falls back to the stacked-vmap simulation (always
+    correct, single-device friendly).
+    """
+    devices = list(devices) if devices is not None else jax.devices()
+    name = suggest_backend_name(_plan_kind(plan_or_schedule), n_clients,
+                                len(devices))
+    if name == "shard_map":
+        mesh = jax.make_mesh((len(devices),), (axis_name,), devices=devices)
+        return ShardMapBackend(mesh=mesh, axis_name=axis_name,
+                               n_clients=n_clients)
+    return StackedVmapBackend()
 
 
 def get_backend(name: str, *, mesh=None, axis_name: str = "clients",

@@ -15,7 +15,11 @@ the sweep axis, composed with the per-client ``vmap`` inside ``grad_fn``.
 Shapes:
   hypers        Hyper with leaves (S,)            (or unstacked: broadcast)
   mixer         Mixer closure, or MixPlan whose leaves may carry a leading
-                (S,) axis (dense: W is (S, n, n)) — the topology sweep axis
+                (S,) axis (dense: W is (S, n, n)) — the topology sweep
+                axis — or a round-indexed MixSchedule whose leaves may
+                carry the same leading (S,) sweep axis ahead of their
+                round axis (stacked: W is (S, R, n, n); lazy: active is
+                (S, R, n)) — the *schedule* sweep axis
   batches       leaves (rounds, T0, n_clients, B, ...)   shared across sweep
                 or (S, rounds, T0, n_clients, B, ...)    per-config data
   final state   leaves (S, n_clients, ...)
@@ -50,6 +54,7 @@ from repro.core import (
 )
 from repro.core.hyper import stack_hypers
 from repro.core.mixing import MixPlan, validate_plan
+from repro.core.schedule import MixSchedule, validate_schedule
 from repro.training.backends import (
     ExecutionBackend,
     StackedVmapBackend,
@@ -110,13 +115,15 @@ def _normalise_operands(mixer, hypers, n_extra: int = 1
 
     Exactly one of ``legacy_mixer`` / a real plan is active: legacy Mixer
     closures ride along untouched (plan degenerates to identity with no
-    leaves), MixPlans become traced operands.  Unstacked operands broadcast
-    (in_axes None); stacked ones map (in_axes 0) and must agree on S.
-    ``n_extra`` is the sweep length implied by other mapped operands
-    (params_axis / batch_axis), so params-only or data-only sweeps with an
-    unstacked Hyper/plan still size S correctly.
+    leaves), MixPlans — and round-indexed MixSchedules, which expose the
+    same ``is_stacked``/``n_sweep``/``point`` surface over their *sweep*
+    axis — become traced operands.  Unstacked operands broadcast (in_axes
+    None); stacked ones map (in_axes 0) and must agree on S.  ``n_extra``
+    is the sweep length implied by other mapped operands (params_axis /
+    batch_axis), so params-only or data-only sweeps with an unstacked
+    Hyper/plan still size S correctly.
     """
-    if isinstance(mixer, MixPlan):
+    if isinstance(mixer, (MixPlan, MixSchedule)):
         legacy, plan = None, mixer
     else:
         legacy, plan = mixer, MixPlan.identity()
@@ -126,7 +133,8 @@ def _normalise_operands(mixer, hypers, n_extra: int = 1
     S_p = plan.n_sweep
     S = max(S_h if hyper_stacked else 1, S_p, n_extra)
     for name, stacked, length in (("Hyper", hyper_stacked, S_h),
-                                  ("MixPlan", plan.is_stacked, S_p),
+                                  ("MixPlan/MixSchedule", plan.is_stacked,
+                                   S_p),
                                   ("params/batches", n_extra > 1, n_extra)):
         if stacked and length != S:
             raise ValueError(
@@ -139,6 +147,14 @@ def _normalise_operands(mixer, hypers, n_extra: int = 1
     hyper_axes = 0 if hyper_stacked else None
     plan_axes = 0 if plan.is_stacked else None
     return legacy, plan, hypers, S, hyper_axes, plan_axes
+
+
+def _validate_operand(plan, n_clients: int) -> None:
+    """Assumption-2 gate for either mixing operand form."""
+    if isinstance(plan, MixSchedule):
+        validate_schedule(plan, n_clients)
+    else:
+        validate_plan(plan, n_clients)
 
 
 def _scanned_run(grad_fn, config, n_clients, metrics_fn, mixer_factory):
@@ -248,7 +264,7 @@ def sweep_run(
     legacy, plan, hypers, S, hyper_axes, plan_axes = _normalise_operands(
         mixer, hypers, n_extra)
     if legacy is None:
-        validate_plan(plan, n_clients)
+        _validate_operand(plan, n_clients)
     mixer_factory = ((lambda p: legacy) if legacy is not None
                      else backend.mixer_for)
     run_one = _scanned_run(grad_fn, config, n_clients, metrics_fn,
@@ -286,7 +302,7 @@ def sweep_run_sequential(
     legacy, plan, hypers, S, hyper_axes, plan_axes = _normalise_operands(
         mixer, hypers, n_extra)
     if legacy is None:
-        validate_plan(plan, n_clients)  # same legality gate as sweep_run
+        _validate_operand(plan, n_clients)  # same legality gate as sweep_run
     mixer_factory = ((lambda p: legacy) if legacy is not None
                      else backend.mixer_for)
     # the *same* scanned program as sweep_run — only the batching differs —

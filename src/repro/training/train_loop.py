@@ -23,8 +23,9 @@ from repro.core import (
     stationarity_metrics,
 )
 from repro.core.mixing import MixPlan, validate_plan
+from repro.core.schedule import MixSchedule, validate_schedule
 from repro.models.registry import Model
-from repro.training.backends import ExecutionBackend, StackedVmapBackend
+from repro.training.backends import ExecutionBackend, suggest_backend
 
 
 @dataclasses.dataclass
@@ -37,18 +38,35 @@ class TrainerConfig:
 
 
 class FederatedTrainer:
-    """Drives DEPOSITUM rounds for a zoo model on stacked client batches."""
+    """Drives DEPOSITUM rounds for a zoo model on stacked client batches.
+
+    Mixing resolves in priority order: an explicit ``mixer`` closure, else a
+    round-indexed ``schedule`` (:class:`~repro.core.schedule.MixSchedule` —
+    time-varying topologies, partial participation, Chebyshev rounds), else
+    a static plan built from ``cfg.topology``.  With ``backend=None`` the
+    execution backend is auto-selected from the plan's sparsity and the
+    host's devices (:func:`~repro.training.backends.suggest_backend`):
+    single-device hosts keep the stacked-vmap simulation, multi-device
+    hosts get the matching shard_map collective schedule.
+    """
 
     def __init__(self, model: Model, cfg: TrainerConfig, mixer=None,
-                 backend: ExecutionBackend | None = None):
+                 backend: ExecutionBackend | None = None,
+                 schedule: MixSchedule | None = None):
         self.model = model
         self.cfg = cfg
         plan = MixPlan.from_topology(cfg.topology, cfg.n_clients)
         validate_plan(plan, cfg.n_clients)
         self.plan = plan
         self.W = np.asarray(plan.W)
+        self.schedule = schedule
+        if schedule is not None:
+            validate_schedule(schedule, cfg.n_clients)
+        operand = schedule if schedule is not None else plan
+        backend = backend or suggest_backend(operand, cfg.n_clients)
+        self.backend = backend
         self.mixer = (mixer if mixer is not None
-                      else (backend or StackedVmapBackend()).mixer_for(plan))
+                      else backend.mixer_for(operand))
 
         def per_client_loss(params, batch):
             return model.loss(params, batch)

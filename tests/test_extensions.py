@@ -103,3 +103,60 @@ def test_partial_participation_preserves_mean():
     Wt = lazy_subgraph_matrix(W, active)
     x = np.random.default_rng(1).standard_normal((n, d))
     np.testing.assert_allclose((Wt @ x).mean(0), x.mean(0), atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# validate_plan over lazy matrices (property tests, propcheck-compatible)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 16), seed=st.integers(0, 40),
+       p=st.floats(0.0, 1.0), topology=st.sampled_from(["ring", "star",
+                                                        "torus"]))
+def test_lazy_plan_passes_validate_plan(n, seed, p, topology):
+    """For ANY participation draw, the lazy matrix is a valid (possibly
+    non-contracting) mixing plan: symmetric, doubly stochastic, nonnegative.
+    ``validate_plan(..., connected=False)`` is the per-round gate the
+    schedule machinery applies (a single lazy round need not contract)."""
+    from repro.core import MixPlan, validate_plan
+
+    W = mixing_matrix(topology, n)
+    active = np.random.default_rng(seed).random(n) < p
+    Wt = lazy_subgraph_matrix(W, active)
+    validate_plan(MixPlan.dense(Wt), n, connected=False)
+    np.testing.assert_allclose(Wt, Wt.T, atol=1e-10)
+    np.testing.assert_allclose(Wt.sum(0), 1.0, atol=1e-10)  # columns too
+    assert (Wt >= -1e-12).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 16), topology=st.sampled_from(["ring", "star",
+                                                       "torus", "complete"]))
+def test_lazy_all_active_recovers_W_exactly(n, topology):
+    """Full participation must reproduce W entry-for-entry — the identity
+    the schedule equivalence tests (p_active=1.0 == static plan) rest on."""
+    W = mixing_matrix(topology, n)
+    Wt = lazy_subgraph_matrix(W, np.ones(n, dtype=bool))
+    np.testing.assert_allclose(Wt, W, atol=1e-12)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 12), seed=st.integers(0, 20),
+       rounds=st.integers(1, 6))
+def test_lazy_schedule_validates_per_round(n, seed, rounds):
+    """MixSchedule.lazy wires the same masks through validate_schedule:
+    every pre-drawn round matrix passes the Assumption-2 (minus
+    contraction) gate, and the traced execution equals the host matrix."""
+    import jax.numpy as jnp
+    from repro.core import MixPlan, MixSchedule, apply_schedule, \
+        validate_schedule
+
+    W = mixing_matrix("ring", n)
+    sched = MixSchedule.lazy(MixPlan.dense(W), 0.5, rounds=rounds, seed=seed)
+    validate_schedule(sched, n)
+    x = jnp.asarray(np.random.default_rng(seed + 1).standard_normal((n, 3)),
+                    jnp.float32)
+    r = seed % rounds
+    Wt = lazy_subgraph_matrix(W, np.asarray(sched.active[r]) > 0.5)
+    np.testing.assert_allclose(np.asarray(apply_schedule(sched, r, x)),
+                               Wt @ np.asarray(x), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,520 @@
+"""MixSchedule: round-indexed communication as a scanned operand.
+
+Every schedule kind must equal a manual per-round loop built from concrete
+plans (schedule-vs-manual-loop equivalence), a constant schedule must
+reproduce the static-plan trajectory bit-exactly, schedules must sweep
+like plans, and the auto-selected backend must be the documented one.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DepositumConfig,
+    Hyper,
+    MixPlan,
+    MixSchedule,
+    apply_mix,
+    apply_schedule,
+    as_stacked_schedule,
+    init as dep_init,
+    local_then_comm_round,
+    mixing_matrix,
+    schedule_spectral_lambda,
+    stack_hypers,
+    stack_schedules,
+    step,
+    validate_schedule,
+)
+from repro.core.topology import chebyshev_matrix, lazy_subgraph_matrix
+from repro.training.backends import (
+    StackedVmapBackend,
+    suggest_backend,
+    suggest_backend_name,
+)
+from repro.training.sweep import sweep_run, sweep_run_sequential
+
+N, D, T0, ROUNDS = 8, 12, 3, 6
+
+
+def _x(seed=0, n=N, d=D):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal((n, d)), jnp.float32)
+
+
+def linear_problem(seed=0):
+    key = jax.random.PRNGKey(seed)
+    A = jax.random.normal(key, (N, 16, D))
+    w_true = jax.random.normal(jax.random.fold_in(key, 1), (D,))
+    b = jnp.einsum("nmd,d->nm", A, w_true)
+
+    def grad_fn(w_stacked, batch):
+        r = jnp.einsum("nmd,nd->nm", A, w_stacked) - b
+        return jnp.einsum("nmd,nm->nd", A, r) / A.shape[1], {}
+
+    return grad_fn
+
+
+def _cfg(**kw):
+    # float fields match the Hyper points used by the sweep tests, so
+    # hyper=None references and hyper-operand sweeps are comparable
+    kw.setdefault("alpha", 0.05)
+    kw.setdefault("beta", 1.0)
+    kw.setdefault("gamma", 0.5)
+    kw.setdefault("momentum", "polyak")
+    kw.setdefault("comm_period", T0)
+    kw.setdefault("prox_name", "l1")
+    kw.setdefault("prox_kwargs", {"lam": 1e-3})
+    return DepositumConfig(**kw)
+
+
+def _run_rounds(mixer, rounds=ROUNDS, cfg=None, grad_fn=None):
+    """Reference loop: `rounds` calls of local_then_comm_round."""
+    cfg = cfg or _cfg()
+    grad_fn = grad_fn or linear_problem()
+    state = dep_init(jnp.zeros(D), N)
+    rnd = jax.jit(functools.partial(local_then_comm_round, grad_fn=grad_fn,
+                                    config=cfg, mixer=mixer))
+    for _ in range(rounds):
+        state, _ = rnd(state, batches=jnp.zeros((T0, 1)))
+    return state
+
+
+def _run_manual(plans_per_round, cfg=None, grad_fn=None):
+    """Manual loop: a fresh static plan (its own jit) for every round —
+    the thing a schedule replaces with one traced operand."""
+    cfg = cfg or _cfg()
+    grad_fn = grad_fn or linear_problem()
+    state = dep_init(jnp.zeros(D), N)
+    for plan in plans_per_round:
+        state, _ = jax.jit(functools.partial(
+            local_then_comm_round, grad_fn=grad_fn, config=cfg,
+            mixer=plan))(state, batches=jnp.zeros((T0, 1)))
+    return state
+
+
+def _assert_states_close(a, b, atol=1e-6, rtol=2e-5):
+    for name in ("x", "y", "nu", "mu", "g"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+            rtol=rtol, atol=atol, err_msg=f"leaf {name}")
+
+
+# ---------------------------------------------------------------------------
+# schedule-vs-manual-loop equivalence, kind by kind (stacked-vmap backend)
+# ---------------------------------------------------------------------------
+
+def test_constant_schedule_bitexact_static_plan():
+    """Acceptance criterion: constant MixSchedule == PR 2 static plan,
+    bit for bit."""
+    plan = MixPlan.dense(mixing_matrix("ring", N))
+    ref = _run_rounds(plan)
+    got = _run_rounds(MixSchedule.constant(plan))
+    for name in ("x", "y", "nu", "mu", "g"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, name)), np.asarray(getattr(ref, name)),
+            err_msg=f"leaf {name} not bit-exact")
+
+
+def test_stacked_schedule_matches_manual_loop():
+    rng = np.random.default_rng(0)
+    plans = [MixPlan.dense(mixing_matrix("erdos", N, p=0.5, seed=s))
+             for s in range(ROUNDS)]
+    sched = MixSchedule.stacked(plans)
+    assert sched.n_rounds == ROUNDS
+    _assert_states_close(_run_rounds(sched), _run_manual(plans))
+
+
+def test_stacked_schedule_clamps_past_the_end():
+    plans = [MixPlan.dense(mixing_matrix(t, N)) for t in ("ring", "star")]
+    sched = MixSchedule.stacked(plans)
+    got = _run_rounds(sched, rounds=4)
+    ref = _run_manual(plans + [plans[-1], plans[-1]])
+    _assert_states_close(got, ref)
+
+
+def test_alternating_schedule_matches_manual_loop():
+    plans = [MixPlan.dense(mixing_matrix("ring", N)),
+             MixPlan.dense(mixing_matrix("complete", N))]
+    sched = MixSchedule.alternating(plans)
+    per_round = [plans[r % 2] for r in range(ROUNDS)]
+    _assert_states_close(_run_rounds(sched), _run_manual(per_round))
+
+
+@pytest.mark.parametrize("p_active", [0.3, 0.7, 1.0])
+def test_lazy_schedule_matches_lazy_subgraph_loop(p_active):
+    """Remark 3: each lazy round == the host-built lazy_subgraph_matrix."""
+    W = mixing_matrix("ring", N)
+    sched = MixSchedule.lazy(MixPlan.dense(W), p_active, rounds=ROUNDS,
+                             seed=11)
+    per_round = [
+        MixPlan.dense(lazy_subgraph_matrix(
+            W, np.asarray(sched.active[r]) > 0.5))
+        for r in range(ROUNDS)
+    ]
+    _assert_states_close(_run_rounds(sched), _run_manual(per_round))
+
+
+def test_lazy_all_active_equals_base_plan():
+    W = mixing_matrix("star", N)
+    sched = MixSchedule.lazy(MixPlan.dense(W), 1.0, rounds=ROUNDS)
+    assert np.asarray(sched.active).min() == 1.0
+    _assert_states_close(_run_rounds(sched),
+                         _run_rounds(MixPlan.dense(W)))
+
+
+def test_lazy_circulant_matches_dense_lazy():
+    """Masked-roll circulant execution == dense lazy matrix of the same
+    circulant W (the ppermute form's simulation twin)."""
+    pc = MixPlan.circulant([(+1, 1 / 3), (-1, 1 / 3)], 1 / 3)
+    sched = MixSchedule.lazy(pc, 0.5, rounds=5, n=N, seed=5)
+    from repro.core import as_dense
+    Wc = np.asarray(as_dense(pc, N).W)
+    x = _x(3)
+    for r in range(5):
+        got = apply_schedule(sched, r, x)
+        Wt = lazy_subgraph_matrix(Wc, np.asarray(sched.active[r]) > 0.5)
+        np.testing.assert_allclose(np.asarray(got), Wt @ np.asarray(x),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_chebyshev_schedule_matches_matrix_loop(k):
+    W = mixing_matrix("ring", N)
+    sched = MixSchedule.chebyshev(MixPlan.dense(W), k)
+    per_round = [MixPlan.dense(chebyshev_matrix(W, k))] * ROUNDS
+    _assert_states_close(_run_rounds(sched), _run_manual(per_round),
+                         atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the chebyshev MixPlan kind itself
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_chebyshev_plan_matches_chebyshev_matrix(k):
+    W = mixing_matrix("ring", N)
+    plan = MixPlan.chebyshev(MixPlan.dense(W), k)
+    x = _x()
+    np.testing.assert_allclose(np.asarray(apply_mix(plan, x)),
+                               chebyshev_matrix(W, k) @ np.asarray(x),
+                               rtol=1e-4, atol=1e-5)
+    from repro.core import as_dense, plan_spectral_lambda, validate_plan
+    np.testing.assert_allclose(np.asarray(as_dense(plan, N).W),
+                               chebyshev_matrix(W, k), atol=1e-6)
+    validate_plan(plan, N)  # negative entries allowed for chebyshev
+    lam = float(plan_spectral_lambda(plan, N))
+    from repro.core import spectral_lambda
+    assert abs(lam - spectral_lambda(chebyshev_matrix(W, k))) < 1e-6
+
+
+def test_chebyshev_plan_circulant_base():
+    pc = MixPlan.circulant([(+1, 1 / 3), (-1, 1 / 3)], 1 / 3)
+    plan = MixPlan.chebyshev(pc, 3, n=N)
+    from repro.core import as_dense
+    Wc = np.asarray(as_dense(pc, N).W)
+    x = _x(4)
+    np.testing.assert_allclose(np.asarray(apply_mix(plan, x)),
+                               chebyshev_matrix(Wc, 3) @ np.asarray(x),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_chebyshev_rejects_bad_inputs():
+    W = mixing_matrix("ring", N)
+    with pytest.raises(ValueError):
+        chebyshev_matrix(W, 0)
+    with pytest.raises(ValueError):
+        chebyshev_matrix(W, -3)
+    with pytest.raises(ValueError):
+        chebyshev_matrix(np.triu(W), 2)  # non-symmetric
+    with pytest.raises(ValueError):
+        MixPlan.chebyshev(MixPlan.dense(W), 0)
+    with pytest.raises(ValueError):
+        MixPlan.chebyshev(MixPlan.dense(np.triu(W) + 0.01), 2)
+    with pytest.raises(ValueError):  # no nesting
+        MixPlan.chebyshev(MixPlan.chebyshev(MixPlan.dense(W), 2), 2)
+
+
+def test_chebyshev_plans_stack_and_sweep():
+    from repro.core import stack_mixplans
+    Ws = [mixing_matrix(t, N) for t in ("ring", "star")]
+    plans = [MixPlan.chebyshev(MixPlan.dense(W), 3) for W in Ws]
+    stacked = stack_mixplans(plans)
+    assert stacked.is_stacked and stacked.n_sweep == 2
+    x = _x(5)
+    got = jax.vmap(lambda p: apply_mix(p, x))(stacked)
+    for s, W in enumerate(Ws):
+        np.testing.assert_allclose(np.asarray(got[s]),
+                                   chebyshev_matrix(W, 3) @ np.asarray(x),
+                                   rtol=1e-4, atol=1e-5)
+    with pytest.raises(ValueError):  # k is static: heterogeneous k rejected
+        stack_mixplans([MixPlan.chebyshev(MixPlan.dense(Ws[0]), 2),
+                        MixPlan.chebyshev(MixPlan.dense(Ws[0]), 3)])
+
+
+# ---------------------------------------------------------------------------
+# schedules through the sweep engine
+# ---------------------------------------------------------------------------
+
+def test_lazy_p_grid_sweeps_in_one_program():
+    """p_active is a sweep dimension: a stacked lazy schedule vmaps and
+    matches the sequential per-point reference."""
+    grad_fn = linear_problem()
+    cfg = _cfg()
+    W = mixing_matrix("ring", N)
+    ps = (0.3, 0.6, 1.0)
+    grid = stack_schedules([
+        MixSchedule.lazy(MixPlan.dense(W), p, rounds=ROUNDS, seed=2)
+        for p in ps])
+    assert grid.is_stacked and grid.n_sweep == len(ps)
+    h = Hyper.create(alpha=0.05, beta=1.0, gamma=0.5, lam=1e-3)
+    batches = jnp.zeros((ROUNDS, T0, 1))
+    fs, _ = sweep_run(jnp.zeros(D), grad_fn, cfg, grid,
+                      stack_hypers([h] * len(ps)), batches, n_clients=N)
+    fseq, _ = sweep_run_sequential(jnp.zeros(D), grad_fn, cfg, grid,
+                                   stack_hypers([h] * len(ps)), batches,
+                                   n_clients=N)
+    _assert_states_close(fs, fseq)
+    # the points genuinely differ (less participation, less consensus)
+    assert float(jnp.abs(fs.x[0] - fs.x[2]).max()) > 1e-6
+    # p=1.0 point == the plain static plan
+    f1, _ = sweep_run(jnp.zeros(D), grad_fn, cfg, MixPlan.dense(W),
+                      stack_hypers([h]), batches, n_clients=N)
+    np.testing.assert_allclose(np.asarray(fs.x[2]), np.asarray(f1.x[0]),
+                               rtol=2e-5, atol=1e-6)
+
+
+def test_heterogeneous_schedule_grid_densifies_and_sweeps():
+    """lazy x chebyshev grids share one program via as_stacked_schedule."""
+    grad_fn = linear_problem()
+    cfg = _cfg()
+    W = mixing_matrix("ring", N)
+    base = MixPlan.dense(W)
+    native = ([MixSchedule.lazy(base, p, rounds=ROUNDS, seed=4)
+               for p in (0.4, 1.0)]
+              + [MixSchedule.chebyshev(base, k) for k in (1, 3)])
+    grid = stack_schedules([as_stacked_schedule(s, ROUNDS, N)
+                            for s in native])
+    assert grid.is_stacked and grid.n_sweep == 4
+    validate_schedule(grid, N)
+    h = Hyper.create(alpha=0.05, beta=1.0, gamma=0.5, lam=1e-3)
+    batches = jnp.zeros((ROUNDS, T0, 1))
+    fs, _ = sweep_run(jnp.zeros(D), grad_fn, cfg, grid,
+                      stack_hypers([h] * 4), batches, n_clients=N)
+    # each densified point == its native schedule run
+    for s, sched in enumerate(native):
+        ref = _run_rounds(sched, cfg=cfg, grad_fn=grad_fn)
+        np.testing.assert_allclose(np.asarray(fs.x[s]), np.asarray(ref.x),
+                                   rtol=2e-5, atol=1e-5, err_msg=str(s))
+
+
+def test_chebyshev_circulant_schedules_sweep():
+    """Regression: chebyshev-over-circulant plans have W=None, so the
+    sweep-axis detection must ride the lam leaf — a stacked pair used to be
+    silently treated as unstacked."""
+    specs = [([(+1, 1 / 3), (-1, 1 / 3)], 1 / 3),
+             ([(+1, 0.25), (-1, 0.25)], 0.5)]
+    scheds = [MixSchedule.chebyshev(MixPlan.circulant(ow, sw), 2, n=N)
+              for ow, sw in specs]
+    grid = stack_schedules(scheds)
+    assert grid.is_stacked and grid.n_sweep == 2
+    x = _x(8)
+    from repro.core import as_dense
+    got = jax.vmap(lambda s: apply_schedule(s, 0, x))(grid)
+    for i, (ow, sw) in enumerate(specs):
+        Wc = np.asarray(as_dense(MixPlan.circulant(ow, sw), N).W)
+        np.testing.assert_allclose(np.asarray(got[i]),
+                                   chebyshev_matrix(Wc, 2) @ np.asarray(x),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_chebyshev_schedule_rejects_conflicting_k():
+    """Regression: passing a different k with an already-chebyshev base
+    must raise, not silently keep the base's order."""
+    base = MixPlan.chebyshev(MixPlan.dense(mixing_matrix("ring", N)), 2)
+    assert MixSchedule.chebyshev(base, 2).plan.cheby_k == 2
+    with pytest.raises(ValueError):
+        MixSchedule.chebyshev(base, 5)
+
+
+def test_stack_schedules_rejects_heterogeneous_without_densify():
+    W = MixPlan.dense(mixing_matrix("ring", N))
+    with pytest.raises(ValueError):
+        stack_schedules([MixSchedule.lazy(W, 0.5, rounds=3),
+                         MixSchedule.chebyshev(W, 2)])
+    with pytest.raises(ValueError):
+        stack_schedules([MixSchedule.chebyshev(W, 2),
+                         MixSchedule.chebyshev(W, 3)])  # static k differs
+    with pytest.raises(ValueError):
+        stack_schedules([])
+
+
+def test_schedule_spectral_lambda_and_validation():
+    W = mixing_matrix("ring", N)
+    cheb = MixSchedule.chebyshev(MixPlan.dense(W), 3)
+    lam_cheb = schedule_spectral_lambda(cheb, N)
+    lam_base = schedule_spectral_lambda(
+        MixSchedule.constant(MixPlan.dense(W)), N)
+    assert lam_cheb[0] < lam_base[0]
+    # lazy rounds may be non-contracting in isolation — still validate
+    lazy = MixSchedule.lazy(MixPlan.dense(W), 0.2, rounds=6, seed=0)
+    validate_schedule(lazy, N)
+    # but a broken (non-stochastic) matrix is still rejected
+    bad = MixSchedule.stacked(MixPlan.dense(
+        np.stack([W, np.eye(N) * 0.5])))
+    with pytest.raises(ValueError):
+        validate_schedule(bad, N)
+
+
+# ---------------------------------------------------------------------------
+# schedule consumers: step, DSGD, FederatedTrainer, suggest_backend
+# ---------------------------------------------------------------------------
+
+def test_step_accepts_schedule_directly():
+    """step() derives r = t // T0 for raw MixSchedule mixers."""
+    grad_fn = linear_problem()
+    cfg = _cfg(comm_period=1)
+    plans = [MixPlan.dense(mixing_matrix(t, N)) for t in ("ring", "star")]
+    sched = MixSchedule.alternating(plans)
+    state = dep_init(jnp.zeros(D), N)
+    ref = dep_init(jnp.zeros(D), N)
+    for r in range(4):
+        state, _ = step(state, None, grad_fn, cfg, sched, is_comm_step=True)
+        ref, _ = step(ref, None, grad_fn, cfg, plans[r % 2],
+                      is_comm_step=True)
+    _assert_states_close(state, ref)
+
+
+def test_dsgd_rides_schedules():
+    from repro.core.fedopt import FedAlgConfig, make_algorithm
+
+    grad_fn = linear_problem()
+    W = mixing_matrix("ring", N)
+    sched = MixSchedule.lazy(MixPlan.dense(W), 0.5, rounds=4, seed=9)
+    cfg = FedAlgConfig(alpha=0.1, local_steps=T0, prox_name="l1",
+                       prox_kwargs={"lam": 1e-3}, W=sched)
+    a = make_algorithm("dsgd", cfg)
+    st = a.init(jnp.zeros(D), N)
+    ref_x = st.x
+    for r in range(4):
+        st, _ = a.round(st, jnp.zeros((T0, 1)), grad_fn)
+        # manual: local sgd then the round's lazy matrix
+        cfg_r = FedAlgConfig(alpha=0.1, local_steps=T0, prox_name="l1",
+                             prox_kwargs={"lam": 1e-3}, W=W)
+        a_r = make_algorithm("dsgd", cfg_r)
+        Wt = lazy_subgraph_matrix(W, np.asarray(sched.active[r]) > 0.5)
+        man = a_r._local_sgd(ref_x, jnp.zeros((T0, 1)), grad_fn,
+                             use_prox=True)
+        ref_x = apply_mix(MixPlan.dense(Wt), man)
+        np.testing.assert_allclose(np.asarray(st.x), np.asarray(ref_x),
+                                   rtol=2e-5, atol=1e-6, err_msg=f"round {r}")
+    # server algorithms still reject the override
+    a2 = make_algorithm("fedmid", FedAlgConfig(
+        alpha=0.1, local_steps=T0, prox_name="l1",
+        prox_kwargs={"lam": 1e-3}))
+    with pytest.raises(ValueError):
+        a2.round(a2.init(jnp.zeros(D), N), jnp.zeros((T0, 1)), grad_fn,
+                 plan=sched)
+
+
+def test_dsgd_schedule_sweep_through_engine():
+    """A stacked lazy schedule sweeps DSGD over p_active in one compiled
+    program (sweep_run_fedalg), matching per-point rounds — baselines ride
+    the same schedule axis as DEPOSITUM."""
+    from repro.core.fedopt import FedAlgConfig, make_algorithm
+    from repro.training.sweep import sweep_run_fedalg
+
+    grad_fn = linear_problem()
+    W = mixing_matrix("ring", N)
+    ps = (0.4, 1.0)
+    scheds = [MixSchedule.lazy(MixPlan.dense(W), p, rounds=4, seed=6)
+              for p in ps]
+    grid = stack_schedules(scheds)
+    cfg = FedAlgConfig(alpha=0.1, local_steps=T0, prox_name="l1",
+                       prox_kwargs={"lam": 1e-3}, W=W)
+    a = make_algorithm("dsgd", cfg)
+    h = Hyper.create(alpha=0.1, lam=1e-3)
+    batches = jnp.broadcast_to(jnp.zeros((T0, 1)), (4, T0, 1))
+    fs, _ = sweep_run_fedalg(a, jnp.zeros(D), grad_fn,
+                             stack_hypers([h] * len(ps)), batches,
+                             n_clients=N, plan=grid)
+    for s, sched in enumerate(scheds):
+        st = a.init(jnp.zeros(D), N)
+        for _ in range(4):
+            st, _ = a.round(st, jnp.zeros((T0, 1)), grad_fn, hyper=h,
+                            plan=sched)
+        np.testing.assert_allclose(np.asarray(fs.x[s]), np.asarray(st.x),
+                                   rtol=2e-5, atol=1e-6,
+                                   err_msg=f"p={ps[s]}")
+
+
+def test_suggest_backend_decision_table():
+    # circulant wants ppermute: exactly one client per device
+    assert suggest_backend_name("circulant", 8, 8) == "shard_map"
+    assert suggest_backend_name("circulant", 8, 4) == "stacked-vmap"
+    # dense/complete want all_gather/pmean whenever devices divide clients
+    assert suggest_backend_name("dense", 8, 4) == "shard_map"
+    assert suggest_backend_name("dense", 10, 4) == "stacked-vmap"
+    assert suggest_backend_name("complete", 8, 2) == "shard_map"
+    # degenerate hosts / plans simulate
+    assert suggest_backend_name("dense", 8, 1) == "stacked-vmap"
+    assert suggest_backend_name("identity", 8, 8) == "stacked-vmap"
+    assert suggest_backend_name("circulant", 1, 8) == "stacked-vmap"
+    # chebyshev resolves through its base kind; schedules through their plan
+    pc = MixPlan.circulant([(+1, 0.25), (-1, 0.25)], 0.5)
+    from repro.training.backends import _plan_kind
+    assert _plan_kind(MixPlan.chebyshev(pc, 2, n=N)) == "circulant"
+    assert _plan_kind(MixSchedule.lazy(pc, 0.5, rounds=2, n=N)) == "circulant"
+    # on this single-device host the suggestion is always simulation
+    be = suggest_backend(MixPlan.dense(mixing_matrix("ring", N)), N)
+    assert isinstance(be, StackedVmapBackend)
+
+
+def test_federated_trainer_with_schedule():
+    """Trainer accepts a schedule; a constant one reproduces the default
+    (static-plan) trajectory bit-exactly; backend auto-selection keeps the
+    single-device simulation."""
+    from repro.models import build_model
+    from repro.configs import get_config
+    from repro.training.train_loop import FederatedTrainer, TrainerConfig
+
+    cfg = TrainerConfig(n_clients=4, topology="ring",
+                        depositum=_cfg(comm_period=2,
+                                       prox_kwargs={"lam": 1e-5}))
+    model = build_model(get_config("qwen3-1.7b", reduced=True))
+    t_ref = FederatedTrainer(model, cfg)
+    assert t_ref.backend.name == "stacked-vmap"
+    sched = MixSchedule.constant(MixPlan.from_topology("ring", 4))
+    t_sched = FederatedTrainer(model, cfg, schedule=sched)
+
+    key = jax.random.PRNGKey(0)
+    s_ref = t_ref.init_state(key)
+    s_sched = t_sched.init_state(key)
+    batch = {
+        "tokens": jnp.zeros((2, 4, 1, 16), jnp.int32),
+        "labels": jnp.zeros((2, 4, 1, 16), jnp.int32),
+    }
+    for _ in range(2):
+        s_ref, _ = t_ref._round(s_ref, batch)
+        s_sched, _ = t_sched._round(s_sched, batch)
+    for a, b in zip(jax.tree_util.tree_leaves(s_ref.x)[:4],
+                    jax.tree_util.tree_leaves(s_sched.x)[:4]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_schedule_constructor_rejections():
+    W = MixPlan.dense(mixing_matrix("ring", N))
+    with pytest.raises(ValueError):
+        MixSchedule.lazy(W, 1.5, rounds=3)
+    with pytest.raises(ValueError):
+        MixSchedule.lazy(W, 0.5, rounds=0)
+    with pytest.raises(ValueError):
+        MixSchedule.alternating([W])
+    with pytest.raises(ValueError):
+        MixSchedule.stacked(W)  # no round axis
+    with pytest.raises(ValueError):
+        MixSchedule.constant(MixPlan.dense(
+            np.stack([mixing_matrix("ring", N)] * 2)))  # stacked plan
