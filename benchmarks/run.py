@@ -145,6 +145,30 @@ def main() -> None:
                 })
         record("fig8_timevarying", rows, check, us)
 
+    if wanted("fig_cohort"):
+        from benchmarks import fig_cohort as m
+        if args.quick:
+            m.use_quick_grid()
+        Rc = 8 if args.quick else 30
+        rows = m.run(rounds=Rc, sequential=args.sequential)
+        us = np.mean([r["curves"]["wall_s"] / r["curves"]["iters"]
+                      for r in rows]) * 1e6
+        check = m.check(rows)
+        if not args.sequential:
+            # the cohort grid both ways: one padded-axis program for every
+            # (n_clients, p_active) point vs one fresh jit per NATIVE size
+            check["sweep_vs_sequential_speedup"] = ratio_section(
+                "cohort_grid", m, rows, Rc,
+                "cohort (n_clients x p_active over one padded client axis)",
+                extra={
+                    "n_max": m.N_MAX,
+                    "sizes": sorted({r["n_clients"] for r in rows}),
+                    "p_active": m.P_ACTIVE,
+                    "eff_clients_per_round": {
+                        r["name"]: r["eff_clients_per_round"] for r in rows},
+                })
+        record("fig_cohort", rows, check, us)
+
     if wanted("fig7_speedup"):
         from benchmarks import fig7_speedup as m
         rows = m.run(sequential=args.sequential)
@@ -172,6 +196,12 @@ def main() -> None:
         assert "schedule_grid" in bench_sweep, \
             "fig8_timevarying ran but BENCH_sweep.json gained no " \
             "schedule_grid section"
+    if wanted("fig_cohort") and args.quick and not args.sequential:
+        # CI contract: the quick run must record the cohort grid, and the
+        # merge below must not clobber sections other figures recorded
+        assert "cohort_grid" in bench_sweep, \
+            "fig_cohort ran but BENCH_sweep.json gained no " \
+            "cohort_grid section"
 
     if bench_sweep:  # at least one ratio measured
         bench_path = os.path.join(_ROOT, "BENCH_sweep.json")

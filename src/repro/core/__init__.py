@@ -40,12 +40,18 @@ from repro.core.mixing import (  # noqa: F401
     stack_mixplans,
     validate_plan,
 )
+from repro.core.cohort import (  # noqa: F401
+    CohortSampler,
+    pad_plan,
+    stack_cohorts,
+)
 from repro.core.schedule import (  # noqa: F401
     MixSchedule,
     ScheduleMixer,
     apply_schedule,
     as_schedule,
     as_stacked_schedule,
+    schedule_round_mask,
     schedule_spectral_lambda,
     stack_schedules,
     validate_schedule,

@@ -1,0 +1,228 @@
+"""Per-round client cohorts: the :class:`CohortSampler` operand.
+
+The paper's linear-speedup claim is a statement about *n*, and Remark 3's
+robustness claim is a statement about *which subset of n shows up each
+round* — yet until this module every compiled program baked in one fixed
+client count: ``n_clients`` was the only axis of the paper that could not
+be swept, and cohorts were capped by what fits a single mixing matrix.
+
+A :class:`CohortSampler` fixes both at once:
+
+* **Padded (ragged) client axis** — every state leaf carries ``n_max``
+  client rows; only the first ``n_eff`` are *eligible* (``n_eff`` is a
+  traced leaf, so one compiled program runs any effective ``n <= n_max``
+  and ``n_clients`` becomes a sweep dimension alongside hyperparameters,
+  topologies and schedules).  Padding rows ride along with zero weight:
+  they are excluded from mixing (:func:`repro.core.schedule` folds them
+  out via the lazy-subgraph matrix) and frozen by the round program
+  (``repro.core.depositum.step`` gates state updates on the round mask).
+* **Per-round client sampling** — the production ``act_prob`` /
+  ``n_workers_per_round`` knob (DFedAvg, FedProx): each round an i.i.d.
+  Bernoulli(``p_active``) or a uniform fixed-size ``k``-of-``n_eff``
+  cohort is drawn **on device, inside the scan** via
+  ``jax.random.fold_in(key, round)`` — no host-side ``(R, n)`` mask is
+  ever materialised, so R-huge schedules cost O(n) memory, not O(R n).
+
+Draws are *per-client* keyed (``fold_in(fold_in(key, r), i)``), which
+makes masks **prefix-consistent**: a sampler padded to a larger ``n_max``
+draws exactly the same per-client uniforms on the shared prefix, so a
+padded run reproduces its unpadded reference point for point.
+
+``kind`` and ``n_max`` are static (aux_data); ``n_eff``, ``p_active``,
+``k`` and ``key`` are leaves, so samplers stack on a leading sweep axis
+(:func:`stack_cohorts`) exactly like :class:`~repro.core.hyper.Hyper` and
+:class:`~repro.core.mixing.MixPlan` and vmap through the sweep engine.
+Execution rides :class:`~repro.core.schedule.MixSchedule` (kinds
+``cohort`` — full participation semantics, local compute + communication
+gated — and the on-device redraw path of ``lazy``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mixing import MixPlan, as_dense
+
+_KINDS = ("full", "bernoulli", "fixed")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CohortSampler:
+    """Which clients participate each round, as a traced operand.
+
+    Build with the classmethod constructors; ``kind`` and ``n_max`` are
+    static, everything else is a leaf (and may carry a leading ``(S,)``
+    sweep axis after :func:`stack_cohorts`).
+    """
+
+    kind: str                                # static
+    n_max: int                               # static: padded axis length
+    n_eff: jnp.ndarray = None                # () or (S,) int32, <= n_max
+    p_active: Optional[jnp.ndarray] = None   # bernoulli: () or (S,) f32
+    k: Optional[jnp.ndarray] = None          # fixed: () or (S,) int32
+    key: Optional[jnp.ndarray] = None        # PRNG key (2,) or (S, 2)
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return ((self.n_eff, self.p_active, self.k, self.key),
+                (self.kind, self.n_max))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kind, n_max = aux
+        n_eff, p_active, k, key = children
+        return cls(kind=kind, n_max=n_max, n_eff=n_eff, p_active=p_active,
+                   k=k, key=key)
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def full(cls, n_eff: int, n_max: int | None = None) -> "CohortSampler":
+        """Every eligible client participates every round (the padded-axis
+        degenerate case: sampling off, raggedness on)."""
+        n_max = int(n_max) if n_max is not None else int(n_eff)
+        cls._check_sizes(n_eff, n_max)
+        return cls(kind="full", n_max=n_max,
+                   n_eff=jnp.asarray(n_eff, jnp.int32))
+
+    @classmethod
+    def bernoulli(cls, p_active: float, n_max: int, *, seed: int = 0,
+                  key: jnp.ndarray | None = None,
+                  n_eff: int | None = None) -> "CohortSampler":
+        """Each eligible client participates i.i.d. with prob ``p_active``
+        (DFedAvg's ``act_prob``)."""
+        if not 0.0 <= float(jnp.max(jnp.asarray(p_active))) <= 1.0 or \
+           float(jnp.min(jnp.asarray(p_active))) < 0.0:
+            raise ValueError(f"p_active must be in [0, 1], got {p_active}")
+        n_eff = n_max if n_eff is None else n_eff
+        cls._check_sizes(n_eff, n_max)
+        return cls(kind="bernoulli", n_max=int(n_max),
+                   n_eff=jnp.asarray(n_eff, jnp.int32),
+                   p_active=jnp.asarray(p_active, jnp.float32),
+                   key=key if key is not None else jax.random.PRNGKey(seed))
+
+    @classmethod
+    def fixed_size(cls, k: int, n_max: int, *, seed: int = 0,
+                   key: jnp.ndarray | None = None,
+                   n_eff: int | None = None) -> "CohortSampler":
+        """A uniform ``k``-of-``n_eff`` cohort without replacement each
+        round (FedProx's ``n_workers_per_round``); ``k >= n_eff`` clamps
+        to full participation."""
+        n_eff = n_max if n_eff is None else n_eff
+        cls._check_sizes(n_eff, n_max)
+        if int(jnp.min(jnp.asarray(k))) < 1:
+            raise ValueError(f"fixed_size cohorts need k >= 1, got {k}")
+        return cls(kind="fixed", n_max=int(n_max),
+                   n_eff=jnp.asarray(n_eff, jnp.int32),
+                   k=jnp.asarray(k, jnp.int32),
+                   key=key if key is not None else jax.random.PRNGKey(seed))
+
+    @staticmethod
+    def _check_sizes(n_eff, n_max) -> None:
+        if int(n_max) < 1:
+            raise ValueError(f"n_max must be >= 1, got {n_max}")
+        if int(jnp.min(jnp.asarray(n_eff))) < 1 or \
+           int(jnp.max(jnp.asarray(n_eff))) > int(n_max):
+            raise ValueError(
+                f"n_eff must be in [1, n_max={n_max}], got {n_eff}")
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def is_stacked(self) -> bool:
+        return jnp.ndim(self.n_eff) == 1
+
+    @property
+    def n_sweep(self) -> int:
+        return int(self.n_eff.shape[0]) if self.is_stacked else 1
+
+    def point(self, s: int) -> "CohortSampler":
+        if not self.is_stacked:
+            return self
+        return jax.tree_util.tree_map(lambda v: v[s], self)
+
+    # -- the draws ----------------------------------------------------------
+    def eligible(self) -> jnp.ndarray:
+        """(n_max,) 0/1 padding mask: 1 on the first ``n_eff`` rows."""
+        return (jnp.arange(self.n_max) < self.n_eff).astype(jnp.float32)
+
+    def _client_uniforms(self, r) -> jnp.ndarray:
+        """One uniform per client for round ``r``, keyed per client
+        (``fold_in(fold_in(key, r), i)``) so the draw on client ``i`` does
+        not depend on ``n_max`` — padded and unpadded samplers agree on
+        their shared prefix."""
+        kr = jax.random.fold_in(self.key, jnp.asarray(r, jnp.int32))
+        keys = jax.vmap(lambda i: jax.random.fold_in(kr, i))(
+            jnp.arange(self.n_max))
+        return jax.vmap(lambda k: jax.random.uniform(k, ()))(keys)
+
+    def mask_at(self, r) -> jnp.ndarray:
+        """(n_max,) 0/1 active mask for round ``r`` (python int or traced
+        int32) — drawn on device, deterministic in (key, r), so the round
+        program and the mixing path can both call it and agree."""
+        elig = jnp.arange(self.n_max) < self.n_eff
+        if self.kind == "full":
+            return elig.astype(jnp.float32)
+        u = self._client_uniforms(r)
+        if self.kind == "bernoulli":
+            return (elig & (u < self.p_active)).astype(jnp.float32)
+        # fixed: the k smallest uniforms among eligible clients
+        u = jnp.where(elig, u, jnp.inf)
+        ranks = jnp.argsort(jnp.argsort(u))
+        return (elig & (ranks < self.k)).astype(jnp.float32)
+
+    def expected_active(self) -> jnp.ndarray:
+        """E[#active clients per round] (traced-safe)."""
+        ne = jnp.asarray(self.n_eff, jnp.float32)
+        if self.kind == "full":
+            return ne
+        if self.kind == "bernoulli":
+            return ne * self.p_active
+        return jnp.minimum(jnp.asarray(self.k, jnp.float32), ne)
+
+
+def stack_cohorts(samplers: Sequence[CohortSampler]) -> CohortSampler:
+    """Stack same-structure samplers on a new leading sweep axis.
+
+    All samplers must agree on ``kind`` and ``n_max`` (pad to a common
+    ``n_max`` first — that is the point of the padded axis)."""
+    samplers = list(samplers)
+    if not samplers:
+        raise ValueError("need at least one CohortSampler to stack")
+    auxs = {(s.kind, s.n_max) for s in samplers}
+    if len(auxs) > 1:
+        raise ValueError(
+            f"cannot stack heterogeneous samplers ({sorted(auxs)}); pad to "
+            "a common n_max and use one kind")
+    if any(s.is_stacked for s in samplers):
+        raise ValueError("samplers are already sweep-stacked")
+    return jax.tree_util.tree_map(lambda *vs: jnp.stack(vs), *samplers)
+
+
+def pad_plan(plan: MixPlan, n_max: int, n: int | None = None) -> MixPlan:
+    """Embed an (n, n) plan into the padded (n_max, n_max) dense form.
+
+    The padded block is the identity: padding rows hold their value under
+    any mix, and the eligibility mask keeps them out of every active row's
+    contraction (their W entries are zero).  Non-dense plans densify first
+    (``n`` required for circulant).  This is the universal form for
+    sweeping ``n_clients``: per-size graphs pad to one shared ``n_max``
+    and stack into a single (S, n_max, n_max) leaf.
+    """
+    if plan.is_stacked:
+        raise ValueError("pad_plan expects an unstacked plan; pad per point "
+                         "then stack_mixplans")
+    if plan.kind != "dense":
+        plan = as_dense(plan, n)
+    n0 = int(plan.W.shape[-1])
+    if n0 > int(n_max):
+        raise ValueError(f"plan has n={n0} > n_max={n_max}")
+    if n0 == int(n_max):
+        return plan
+    W = jnp.zeros((int(n_max), int(n_max)), plan.W.dtype)
+    W = W.at[:n0, :n0].set(plan.W)
+    pad_idx = jnp.arange(n0, int(n_max))
+    W = W.at[pad_idx, pad_idx].set(1.0)
+    return MixPlan.dense(W)

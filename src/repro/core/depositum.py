@@ -38,7 +38,12 @@ import numpy as np
 from repro.core.gossip import Mixer, identity_mixer
 from repro.core.hyper import Hyper
 from repro.core.mixing import resolve_mixer
-from repro.core.schedule import MixSchedule, ScheduleMixer, apply_schedule
+from repro.core.schedule import (
+    MixSchedule,
+    ScheduleMixer,
+    apply_schedule,
+    schedule_round_mask,
+)
 from repro.core.momentum import MomentumKind, momentum_update
 from repro.core.prox import (
     ProxOperator,
@@ -134,9 +139,24 @@ def _broadcast_clients(params: PyTree, n_clients: int) -> PyTree:
     )
 
 
-def init(params: PyTree, n_clients: int, stacked: bool = False) -> DepositumState:
-    """Initial state: identical x across clients, all auxiliaries zero."""
+def init(params: PyTree, n_clients: int, stacked: bool = False,
+         n_max: int | None = None) -> DepositumState:
+    """Initial state: identical x across clients, all auxiliaries zero.
+
+    ``n_max`` pads the client axis beyond ``n_clients`` (the ragged-axis
+    form): padding rows get zero-filled x and never update — a cohort
+    schedule's eligibility mask keeps them out of mixing and
+    :func:`step` freezes them in place — so one compiled program serves
+    any effective ``n <= n_max``.
+    """
+    if n_max is not None and n_max < n_clients:
+        raise ValueError(f"n_max={n_max} < n_clients={n_clients}")
     x = params if stacked else _broadcast_clients(params, n_clients)
+    if n_max is not None and n_max > n_clients:
+        pad = n_max - n_clients
+        x = jax.tree_util.tree_map(
+            lambda v: jnp.concatenate(
+                [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)]), x)
     z = _zeros_like(x)
     return DepositumState(x=x, y=z, nu=z, mu=z, g=z, t=jnp.zeros((), jnp.int32))
 
@@ -154,6 +174,7 @@ def step(
     *,
     is_comm_step: jnp.ndarray | bool | None = None,
     hyper: Hyper | None = None,
+    active_mask: jnp.ndarray | None = None,
 ) -> tuple[DepositumState, Any]:
     """One DEPOSITUM iteration for all clients.
 
@@ -178,9 +199,18 @@ def step(
     forms the round this iteration belongs to is ``t // T0`` — derived from
     the state's iteration counter, so schedules ride through ``lax.scan``
     with no carry change.
+
+    ``active_mask`` is the cohort gate: an (n,) 0/1 mask under which rows
+    with mask 0 are *frozen* — every state variable keeps its previous
+    value (``t`` still advances; it is the shared iteration counter).  When
+    None and the mixer is a ``cohort`` schedule, this round's mask is
+    derived from the schedule's sampler (:func:`schedule_round_mask`);
+    round loops compute it once and pass it to every local step.
     """
     if isinstance(mixer, (MixSchedule, ScheduleMixer)):
         r = state.t // config.comm_period
+        if active_mask is None:
+            active_mask = schedule_round_mask(mixer, r)
         if isinstance(mixer, MixSchedule):
             sched = mixer
             mixer = lambda tree: apply_schedule(sched, r, tree)
@@ -254,6 +284,23 @@ def step(
         mixed_y = mixer(y_half)
         y_next = tm(lambda a, b: jnp.where(is_comm_step, a, b), mixed_y, y_half)
 
+    if active_mask is not None:
+        # freeze inactive/padding rows: keep every old value where mask = 0
+        # (select, not arithmetic, so active rows keep their bits exactly)
+        am = active_mask
+
+        def keep(new, old):
+            return tm(
+                lambda nw, od: jnp.where(
+                    am.reshape(am.shape + (1,) * (nw.ndim - 1)) > 0, nw, od),
+                new, old)
+
+        x_next = keep(x_next, state.x)
+        y_next = keep(y_next, state.y)
+        nu_next = keep(nu_next, state.nu)
+        mu_next = keep(mu_next, state.mu)
+        g_next = keep(g_next, state.g)
+
     new_state = DepositumState(
         x=x_next, y=y_next, nu=nu_next, mu=mu_next, g=g_next, t=state.t + 1
     )
@@ -268,6 +315,7 @@ def local_then_comm_round(
     mixer: Mixer,
     *,
     hyper: Hyper | None = None,
+    active_mask: jnp.ndarray | None = None,
 ) -> tuple[DepositumState, Any]:
     """One FL round = (T0-1) collective-free local steps + 1 gossip step.
 
@@ -280,15 +328,22 @@ def local_then_comm_round(
     round-indexed :class:`~repro.core.schedule.MixSchedule` (or a backend's
     ``ScheduleMixer``), whose per-round plan is selected by the comm step
     from ``t // T0``.
+
+    For a ``cohort`` schedule the round's active mask is drawn **once**
+    here (``r`` is constant within a round) and threaded through every
+    local step and the comm step, freezing inactive and padding rows for
+    the whole round; ``active_mask`` overrides the draw.
     """
     T0 = config.comm_period
     if hyper is not None:
         config.validate(hyper)  # once per round; no-op for traced values
+    if active_mask is None:
+        active_mask = schedule_round_mask(mixer, state.t // T0)
 
     def local_body(carry, batch):
         new_state, aux = step(
             carry, batch, grad_fn, config, identity_mixer,
-            is_comm_step=False, hyper=hyper,
+            is_comm_step=False, hyper=hyper, active_mask=active_mask,
         )
         return new_state, aux
 
@@ -298,7 +353,7 @@ def local_then_comm_round(
     last_batch = jax.tree_util.tree_map(lambda b: b[T0 - 1], batches)
     state, aux = step(
         state, last_batch, grad_fn, config, mixer,
-        is_comm_step=True, hyper=hyper,
+        is_comm_step=True, hyper=hyper, active_mask=active_mask,
     )
     return state, aux
 
@@ -307,20 +362,48 @@ def local_then_comm_round(
 # Paper metrics (Definition 3): stationarity s(x, nu_bar)
 # ---------------------------------------------------------------------------
 
-def _client_mean(tree):
-    return jax.tree_util.tree_map(lambda v: jnp.mean(v, axis=0), tree)
+def _client_mean(tree, weights: jnp.ndarray | None = None):
+    """Mean over the leading client dim; ``weights`` (n,) restricts it to a
+    sub-population (the padded-axis form: pass the eligibility mask so
+    zero-filled padding rows do not dilute the average).  ``weights=None``
+    keeps the exact unweighted reduction (bit-compatible with older runs).
+    """
+    if weights is None:
+        return jax.tree_util.tree_map(lambda v: jnp.mean(v, axis=0), tree)
+    denom = jnp.maximum(jnp.sum(weights.astype(jnp.float32)), 1e-12)
+
+    def leaf(v):
+        w = (weights / denom).astype(jnp.float32)
+        return jnp.einsum("i,i...->...", w, v.astype(jnp.float32)).astype(
+            v.dtype)
+
+    return jax.tree_util.tree_map(leaf, tree)
 
 
-def _sq_norm(tree) -> jnp.ndarray:
+def _sq_norm(tree, weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Summed squared norm; ``weights`` (n,) masks the leading client dim
+    (only for trees whose leaves carry it)."""
     leaves = jax.tree_util.tree_leaves(tree)
-    return sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    if weights is None:
+        return sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    w = weights.astype(jnp.float32)
+
+    def leaf(l):
+        sq = jnp.square(l.astype(jnp.float32))
+        per_client = jnp.sum(sq.reshape(sq.shape[0], -1), axis=1)
+        return jnp.sum(w * per_client)
+
+    return sum(leaf(l) for l in leaves)
 
 
-def consensus_error(tree) -> jnp.ndarray:
-    """||J v - v||^2 summed over leaves (leading dim = clients)."""
-    mean = _client_mean(tree)
+def consensus_error(tree, weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """||J v - v||^2 summed over leaves (leading dim = clients).
+
+    ``weights`` restricts both the mean and the sum to a client
+    sub-population (eligible rows of a padded axis)."""
+    mean = _client_mean(tree, weights)
     diff = jax.tree_util.tree_map(lambda v, m: v - m[None], tree, mean)
-    return _sq_norm(diff)
+    return _sq_norm(diff, weights)
 
 
 def stationarity_metrics(
@@ -330,8 +413,13 @@ def stationarity_metrics(
     L: float = 1.0,
     *,
     hyper: Hyper | None = None,
+    weights: jnp.ndarray | None = None,
 ) -> dict[str, jnp.ndarray]:
     """Compute the three Definition-3 terms (uses exact grads; eval only).
+
+    ``weights`` is the padded-axis eligibility mask (n,): all means, norms
+    and the client count ``n`` reduce over eligible rows only, so padded
+    runs report the same numbers their unpadded references would.
 
     Definition 2 evaluates ``G^alpha(x_i)`` with the **global** gradient
     ``∇f(x_i) = (1/n) Σ_j ∇f_j(x_i)`` at each client iterate, while the
@@ -345,7 +433,10 @@ def stationarity_metrics(
     """
     hp = config.hyper() if hyper is None else hyper
     tm = jax.tree_util.tree_map
-    n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
+    if weights is None:
+        n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
+    else:
+        n = jnp.sum(weights.astype(jnp.float32))
     global_grads = grad_fns["global_at"](state.x)
     local_grads = grad_fns["local_at"](state.x)
 
@@ -354,12 +445,13 @@ def stationarity_metrics(
     proxed = prox_apply(config.prox_name, shifted, hp.alpha,
                         lam=hp.lam, theta=hp.theta)
     G = tm(lambda p, q: (p - q) / hp.alpha, state.x, proxed)
-    prox_grad_sq = _sq_norm(G)
+    prox_grad_sq = _sq_norm(G, weights)
 
-    cons_x = consensus_error(state.x)
+    cons_x = consensus_error(state.x, weights)
 
-    gbar = _client_mean(local_grads)      # ∇̄f(x): mean of local grads at x_i
-    nubar = _client_mean(state.nu)
+    # ∇̄f(x): mean of local grads at x_i
+    gbar = _client_mean(local_grads, weights)
+    nubar = _client_mean(state.nu, weights)
     est_err = _sq_norm(
         jax.tree_util.tree_map(lambda a, b: a - b, gbar, nubar)
     )
@@ -369,6 +461,6 @@ def stationarity_metrics(
         "consensus_x": cons_x / n,
         "grad_est_err": est_err,
         "stationarity": s,
-        "consensus_y": consensus_error(state.y) / n,
-        "consensus_nu": consensus_error(state.nu) / n,
+        "consensus_y": consensus_error(state.y, weights) / n,
+        "consensus_nu": consensus_error(state.nu, weights) / n,
     }

@@ -13,12 +13,24 @@ to a *round-indexed* operand that is scanned alongside the batches:
   the static-plan path (bit-exact with PR 2 trajectories).
 * ``stacked``     — plan leaves carry a leading round axis ``(R, ...)``;
   round ``r`` uses ``plan[r]`` (clamped at R-1 past the end).
-* ``lazy(p, rng)``— Remark 3 partial participation: a pre-drawn ``(R, n)``
-  0/1 ``active`` mask; round ``r`` applies the lazy-subgraph matrix of the
+* ``lazy(p, rng)``— Remark 3 partial participation: a per-round 0/1
+  ``active`` mask; round ``r`` applies the lazy-subgraph matrix of the
   base plan (inactive mass folds into the diagonal).  Executed natively:
   a masked contraction for dense bases, per-offset masked rolls /
   ``ppermute``\\ s for circulant bases — never by materialising W^t on the
-  host.
+  host.  Masks are either pre-drawn host-side (``rounds=R`` — the
+  reproducible PR 3 form, O(R n) memory) or, with ``rounds=None``, drawn
+  **on device inside the scan** by a :class:`~repro.core.cohort.
+  CohortSampler` (O(n) memory, any horizon).  Inactive clients skip
+  *communication only* — they keep taking local steps.
+* ``cohort``    — the padded / ragged client axis: a
+  :class:`~repro.core.cohort.CohortSampler` draws each round's active
+  cohort on device; the same mask gates **both** the mix (lazy-subgraph
+  semantics over the padded dense plan) and the round program's *local
+  state updates* (inactive and padding rows are frozen in place by
+  ``repro.core.depositum.step``).  With a plan padded via
+  :func:`~repro.core.cohort.pad_plan`, one compiled program runs any
+  effective ``n <= n_max`` — ``n_clients`` becomes a sweep dimension.
 * ``chebyshev(k)``— a constant schedule over a
   :meth:`MixPlan.chebyshev <repro.core.mixing.MixPlan.chebyshev>` plan:
   every round runs k accelerated gossip exchanges as one plan.
@@ -53,6 +65,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cohort import CohortSampler
 from repro.core.mixing import (
     MixPlan,
     apply_mix,
@@ -69,7 +82,18 @@ from repro.core.topology import (
 
 PyTree = Any
 
-_SCHEDULE_KINDS = ("constant", "stacked", "lazy", "chebyshev", "alternating")
+_SCHEDULE_KINDS = ("constant", "stacked", "lazy", "chebyshev", "alternating",
+                   "cohort")
+
+#: Host-side validation of round-varying schedules densifies one matrix per
+#: round; with on-device samplers the horizon is unbounded, and even
+#: pre-drawn R-huge schedules should not cost O(R) dense matrices at
+#: validation time.  ``validate_schedule(rounds=None)`` therefore checks at
+#: most this many rounds per sweep point (a documented sample — Assumption 2
+#: for time-varying networks is a joint-connectivity property anyway, not a
+#: per-round one).  Pass ``rounds=`` explicitly to widen or narrow the
+#: sample.
+VALIDATE_ROUNDS_CAP = 16
 
 
 def _plan_extra_ndim(plan: MixPlan) -> int:
@@ -111,16 +135,19 @@ class MixSchedule:
     plan: MixPlan                            # base / round-stacked plan
     active: Optional[jnp.ndarray] = None     # lazy: (R, n) or (S, R, n)
     period: int = 0                          # static (alternating only)
+    sampler: Optional[CohortSampler] = None  # cohort / on-device lazy
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
-        return (self.plan, self.active), (self.kind, self.period)
+        return (self.plan, self.active, self.sampler), (self.kind,
+                                                        self.period)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         kind, period = aux
-        plan, active = children
-        return cls(kind=kind, plan=plan, active=active, period=period)
+        plan, active, sampler = children
+        return cls(kind=kind, plan=plan, active=active, period=period,
+                   sampler=sampler)
 
     # -- constructors -------------------------------------------------------
     @classmethod
@@ -155,22 +182,32 @@ class MixSchedule:
                    period=len(plans))
 
     @classmethod
-    def lazy(cls, plan: MixPlan, p_active: float, rounds: int, *,
-             n: int | None = None, seed: int = 0,
+    def lazy(cls, plan: MixPlan, p_active: float, rounds: int | None = None,
+             *, n: int | None = None, seed: int = 0,
              rng: np.random.Generator | None = None) -> "MixSchedule":
         """Remark 3 partial participation over ``plan``'s graph.
 
         Each round an i.i.d. Bernoulli(``p_active``) subset of clients is
         active; only edges with BOTH endpoints active communicate, the rest
         of the mass folds into the diagonal (``lazy_subgraph_matrix``
-        semantics, executed natively in-trace).  The mask is drawn here,
-        host-side, so runs are reproducible; ``p_active=1.0`` reproduces
-        the base plan exactly.  ``n`` is required for circulant bases.
+        semantics, executed natively in-trace).  ``p_active=1.0``
+        reproduces the base plan exactly.  ``n`` is required for circulant
+        bases.  Inactive clients skip communication only (they keep taking
+        local steps); for cohorts that freeze entirely use
+        :meth:`cohort`.
+
+        With ``rounds`` given, the ``(R, n)`` mask is pre-drawn here,
+        host-side, from ``rng``/``seed`` (the reproducible PR 3 form).
+        With ``rounds=None`` (and no ``rng``), no mask is materialised at
+        all: a :class:`~repro.core.cohort.CohortSampler` seeded by
+        ``seed`` redraws each round's mask on device inside the scan —
+        O(n) memory at any horizon.
         """
         if not 0.0 <= p_active <= 1.0:
             raise ValueError(f"p_active must be in [0, 1], got {p_active}")
-        if rounds < 1:
-            raise ValueError(f"lazy schedules need rounds >= 1, got {rounds}")
+        if rounds is not None and rounds < 1:
+            raise ValueError(f"lazy schedules need rounds >= 1 (or None "
+                             f"for the on-device draw), got {rounds}")
         if plan.is_stacked:
             raise ValueError("lazy schedules take an unstacked base plan")
         if plan.kind not in ("dense", "circulant"):
@@ -182,10 +219,46 @@ class MixSchedule:
             n = int(plan.W.shape[-1])
         elif n is None:
             raise ValueError("lazy over a circulant plan needs n")
+        if rounds is None:
+            if rng is not None:
+                raise ValueError("rounds=None draws masks on device; a "
+                                 "host rng does not apply (use seed=)")
+            sampler = CohortSampler.bernoulli(p_active, n, seed=seed)
+            return cls(kind="lazy", plan=plan, sampler=sampler)
         rng = rng if rng is not None else np.random.default_rng(seed)
         mask = rng.random((rounds, n)) < p_active
         return cls(kind="lazy", plan=plan,
                    active=jnp.asarray(mask, jnp.float32))
+
+    @classmethod
+    def cohort(cls, plan: MixPlan, sampler: CohortSampler) -> "MixSchedule":
+        """Padded client axis + per-round cohort participation.
+
+        ``plan`` must be a dense ``(n_max, n_max)`` plan (pad a smaller
+        graph with :func:`~repro.core.cohort.pad_plan`); ``sampler`` draws
+        each round's active cohort on device.  Unlike ``lazy``, the drawn
+        mask gates the *whole round*: inactive and padding rows neither
+        communicate nor take local steps — ``repro.core.depositum``
+        freezes them via :func:`schedule_round_mask`.  This is the DFedAvg
+        ``act_prob`` / FedProx ``n_workers_per_round`` semantics, and the
+        form under which ``n_clients`` sweeps (stack per-size padded plans
+        and samplers with :func:`stack_schedules`).
+        """
+        if not isinstance(sampler, CohortSampler):
+            raise TypeError("cohort schedules need a CohortSampler, got "
+                            f"{type(sampler).__name__}")
+        if plan.is_stacked:
+            raise ValueError("cohort schedules take an unstacked plan; "
+                             "stack whole schedules for a sweep axis")
+        if plan.kind != "dense":
+            raise ValueError(
+                f"cohort schedules need a dense (padded) plan, got "
+                f"{plan.kind!r}; densify/pad first (pad_plan)")
+        if int(plan.W.shape[-1]) != sampler.n_max:
+            raise ValueError(
+                f"plan is {plan.W.shape[-1]}x{plan.W.shape[-1]} but the "
+                f"sampler pads to n_max={sampler.n_max}")
+        return cls(kind="cohort", plan=plan, sampler=sampler)
 
     @classmethod
     def chebyshev(cls, base: MixPlan, k: int,
@@ -213,8 +286,12 @@ class MixSchedule:
         """True when the schedule carries a leading *sweep* axis (the round
         axis of ``stacked``/``alternating``/``lazy`` kinds is one level
         in)."""
+        if self.kind == "cohort":
+            return self.sampler.is_stacked
         if self.kind == "lazy":
-            return self.active is not None and jnp.ndim(self.active) == 3
+            if self.active is None:      # on-device sampler draw
+                return self.sampler.is_stacked
+            return jnp.ndim(self.active) == 3
         extra = _plan_extra_ndim(self.plan)
         return extra == (2 if self.kind in ("stacked", "alternating")
                          else 1)
@@ -223,21 +300,27 @@ class MixSchedule:
     def n_sweep(self) -> int:
         if not self.is_stacked:
             return 1
+        if self.kind == "cohort" or (self.kind == "lazy" and
+                                     self.active is None):
+            return self.sampler.n_sweep
         if self.kind == "lazy":
             return int(self.active.shape[0])
         return int(_plan_lead_leaf(self.plan).shape[0])
 
     @property
     def n_rounds(self) -> Optional[int]:
-        """Length of the round axis (None for round-invariant kinds).
+        """Length of the round axis (None for round-invariant kinds —
+        including sampler-driven kinds, whose on-device draws exist for
+        every round).
 
         Rounds past the end clamp to the last entry (``alternating`` wraps
         with its period instead).
         """
-        if self.kind in ("constant", "chebyshev", "alternating"):
+        if self.kind in ("constant", "chebyshev", "alternating", "cohort"):
             return None
         if self.kind == "lazy":
-            return int(self.active.shape[-2])
+            return None if self.active is None else int(
+                self.active.shape[-2])
         leaf = _plan_lead_leaf(self.plan)
         return int(leaf.shape[1] if self.is_stacked else leaf.shape[0])
 
@@ -265,12 +348,14 @@ class MixSchedule:
             return self.plan.point(int(r) % self.period)
         if self.kind == "stacked":
             return self.plan.point(min(int(r), self.n_rounds - 1))
-        # lazy: fold this round's inactive mass into the diagonal
-        r = min(int(r), self.n_rounds - 1)
+        # lazy / cohort: fold this round's inactive mass into the diagonal
+        if self.kind == "cohort" or self.active is None:
+            a = np.asarray(self.sampler.mask_at(int(r)))
+        else:
+            a = np.asarray(self.active[min(int(r), self.n_rounds - 1)])
         base = self.plan if self.plan.kind == "dense" else as_dense(
-            self.plan, int(self.active.shape[-1]))
-        Wt = lazy_subgraph_matrix(np.asarray(base.W),
-                                  np.asarray(self.active[r]) > 0.5)
+            self.plan, a.shape[-1])
+        Wt = lazy_subgraph_matrix(np.asarray(base.W), a > 0.5)
         return MixPlan.dense(Wt)
 
 
@@ -280,11 +365,19 @@ class MixSchedule:
 
 def _lazy_dense_matrix(W: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
     """In-trace lazy-subgraph matrix: W masked by the active-edge outer
-    product, inactive mass folded into the diagonal (Remark 3)."""
-    mask = a[:, None] * a[None, :]
-    off = W * mask.astype(W.dtype)
-    off = off - jnp.diag(jnp.diag(off))
-    return off + jnp.diag(1.0 - jnp.sum(off, axis=1))
+    product, inactive mass folded into the diagonal (Remark 3).
+
+    The diagonal is built as ``W_ii + (dropped off-diagonal mass)`` rather
+    than ``1 - (kept mass)``: both agree up to fp for row-stochastic W, but
+    this form makes an all-active mask return W *bit-exactly* (the dropped
+    mass is a sum of exact zeros), which is what lets cohort/lazy runs at
+    full participation pin against static-plan trajectories.
+    """
+    mask = (a[:, None] * a[None, :]).astype(W.dtype)
+    offdiag = W - jnp.diag(jnp.diag(W))
+    kept = offdiag * mask
+    dropped = offdiag * (1.0 - mask)
+    return kept + jnp.diag(jnp.diag(W) + jnp.sum(dropped, axis=1))
 
 
 def _apply_lazy(plan: MixPlan, a: jnp.ndarray, tree: PyTree) -> PyTree:
@@ -326,9 +419,34 @@ def apply_schedule(sched: MixSchedule, r, tree: PyTree) -> PyTree:
     if sched.kind in ("stacked", "alternating"):
         return apply_mix(_point_traced(sched.plan, sched._round_index(r)),
                          tree)
-    # lazy
-    a = jnp.take(sched.active, sched._round_index(r), axis=0, mode="clip")
+    # lazy / cohort: mask this round's edges, fold the rest to the diagonal
+    a = _schedule_active_mask(sched, r)
     return _apply_lazy(sched.plan, a, tree)
+
+
+def _schedule_active_mask(sched: MixSchedule, r) -> jnp.ndarray:
+    """This round's (n,) 0/1 active mask for lazy/cohort schedules —
+    gathered from the pre-drawn ``active`` array or redrawn on device by
+    the sampler (deterministic in (key, r), so every call site agrees)."""
+    if sched.active is not None:
+        return jnp.take(sched.active, sched._round_index(r), axis=0,
+                        mode="clip")
+    return sched.sampler.mask_at(r)
+
+
+def schedule_round_mask(mixer_or_sched, r) -> Optional[jnp.ndarray]:
+    """The (n,) mask gating round ``r``'s *state updates*, or None.
+
+    Only ``cohort`` schedules gate local compute (inactive/padding rows
+    freeze for the whole round); ``lazy`` masks communication only, and
+    every other kind updates all clients.  The round program calls this
+    once per round and threads the mask through each local step.  Accepts
+    a :class:`MixSchedule` or a :class:`ScheduleMixer` wrapper.
+    """
+    sched = getattr(mixer_or_sched, "schedule", mixer_or_sched)
+    if isinstance(sched, MixSchedule) and sched.kind == "cohort":
+        return sched.sampler.mask_at(r)
+    return None
 
 
 def as_schedule(mixer_or_plan) -> "MixSchedule":
@@ -370,8 +488,11 @@ def shard_schedule_body(sched: MixSchedule, r, x_blk: jnp.ndarray,
 
     * ``stacked``/``alternating`` — the round's plan leaves are gathered
       from the (replicated) stacked operand, then mixed as usual.
-    * ``lazy`` + dense base — the in-trace lazy matrix masks the
-      all_gather contraction's rows.
+    * ``lazy``/``cohort`` + dense base — the in-trace lazy matrix masks the
+      all_gather contraction's rows (sampler-driven masks are redrawn
+      identically on every shard from the replicated key — no extra
+      collective).  Padding rows of a cohort plan are identity rows, so
+      they ride the same dispatch with zero weight.
     * ``lazy`` + circulant base — each ``ppermute`` contribution is masked
       by its active-edge value ``a_i * a_{(i+off) % n}`` (needs one client
       per device, like all circulant shard plans).
@@ -382,8 +503,8 @@ def shard_schedule_body(sched: MixSchedule, r, x_blk: jnp.ndarray,
     if sched.kind in ("stacked", "alternating"):
         plan_r = _point_traced(sched.plan, sched._round_index(r))
         return shard_body(plan_r, x_blk, axis_name, n)
-    # lazy
-    a = jnp.take(sched.active, sched._round_index(r), axis=0, mode="clip")
+    # lazy / cohort
+    a = _schedule_active_mask(sched, r)
     plan = sched.plan
     if plan.kind == "dense":
         Wt = _lazy_dense_matrix(plan.W, a)
@@ -418,7 +539,10 @@ def stack_schedules(schedules: Sequence[MixSchedule]) -> MixSchedule:
     if not schedules:
         raise ValueError("need at least one MixSchedule to stack")
     auxs = {(s.kind, s.period, s.plan.kind, s.plan.offsets, s.plan.cheby_k,
-             s.plan.base_kind) for s in schedules}
+             s.plan.base_kind,
+             None if s.sampler is None else (s.sampler.kind,
+                                             s.sampler.n_max))
+            for s in schedules}
     if len(auxs) > 1:
         raise ValueError(
             f"cannot stack heterogeneous schedules ({len(auxs)} distinct "
@@ -443,6 +567,11 @@ def as_stacked_schedule(sched: MixSchedule, rounds: int,
     """
     if sched.is_stacked:
         raise ValueError("as_stacked_schedule expects an unswept schedule")
+    if sched.kind == "cohort":
+        raise ValueError(
+            "cohort schedules do not densify: the drawn mask also gates "
+            "local state updates, which a per-round W stack cannot "
+            "express — sweep cohort schedules directly (stack_schedules)")
     Ws = np.stack([np.asarray(as_dense(sched.plan_at(r), n).W)
                    for r in range(rounds)])
     return MixSchedule(kind="stacked", plan=MixPlan.dense(Ws))
@@ -461,16 +590,35 @@ def validate_schedule(sched: MixSchedule, n: int | None = None,
     allowed negative entries (symmetry + rows summing to one is the
     invariant that keeps the tracking identity alive); lazy masks of a
     nonnegative base stay nonnegative by construction and are checked
-    strictly.
+    strictly.  Cohort schedules are checked like lazy ones (padding rows
+    are identity rows and isolate cleanly).
+
+    With ``rounds=None``, round-varying kinds are sampled at no more than
+    :data:`VALIDATE_ROUNDS_CAP` rounds per sweep point — densifying one
+    host matrix per round does not scale to R-huge or unbounded
+    (sampler-driven) horizons.
     """
     for s in range(sched.n_sweep) if sched.is_stacked else (None,):
         ss = sched if s is None else sched.point(s)
+        if ss.kind in ("lazy", "cohort"):
+            # per-round lazy matrices re-derive their diagonal and are
+            # row-stochastic by construction — a defective BASE plan (rows
+            # not summing to 1, negative edges) would slip through the
+            # round loop, so check it directly (identity padding rows of a
+            # cohort plan validate cleanly; connectivity is per-round)
+            validate_plan(ss.plan, n, atol=atol, connected=False)
         if ss.kind in ("constant", "chebyshev"):
             R = 1
         elif ss.kind == "alternating":
             R = ss.period
         else:
-            R = ss.n_rounds if rounds is None else min(rounds, ss.n_rounds)
+            horizon = ss.n_rounds  # None for sampler-driven kinds
+            if rounds is not None:
+                R = rounds if horizon is None else min(rounds, horizon)
+            elif horizon is None:
+                R = VALIDATE_ROUNDS_CAP
+            else:
+                R = min(horizon, VALIDATE_ROUNDS_CAP)
         for r in range(R):
             plan_r = ss.plan_at(r)
             if ss.kind in ("stacked", "alternating"):

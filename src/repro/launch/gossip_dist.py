@@ -89,14 +89,17 @@ def make_shardmap_schedule_mixer(placement: Placement, axes_tree: Any,
                                  shapes_tree: Any, schedule: MixSchedule):
     """Round-indexed placement mixer: ``mix(tree, r)`` inside shard_map.
 
-    The per-round dispatch (lazy rounds mask each ppermute/all_gather
-    contribution by the active-edge vector, Chebyshev rounds unroll their k
-    collectives, stacked/alternating rounds gather the round's plan
-    operand) is :func:`repro.core.schedule.shard_schedule_body` — shared
-    with the generic ``ShardMapBackend``, so the launch path and the sweep
-    engine execute time-varying communication identically.  The round
-    program supplies ``r = t // T0`` (``repro.core.depositum.step`` does
-    this for any ``ScheduleMixer``).
+    The per-round dispatch (lazy/cohort rounds mask each
+    ppermute/all_gather contribution by the active-edge vector — sampler
+    masks are redrawn identically on every shard from the replicated key —
+    Chebyshev rounds unroll their k collectives, stacked/alternating
+    rounds gather the round's plan operand) is
+    :func:`repro.core.schedule.shard_schedule_body` — shared with the
+    generic ``ShardMapBackend``, so the launch path and the sweep engine
+    execute time-varying communication identically.  The round program
+    supplies ``r = t // T0`` (``repro.core.depositum.step`` does this for
+    any ``ScheduleMixer``, and also derives the cohort state-freeze mask
+    there).
     """
     mesh = placement.mesh
     caxes = placement.clients_axes

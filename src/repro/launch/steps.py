@@ -85,7 +85,9 @@ def build_train_step(
     ``plan``/``topology`` — executed by ``backend`` (default stacked-vmap:
     dense contraction, which GSPMD lowers to all-gather + local einsum on a
     sharded client axis).  Schedules derive their round from the state's
-    iteration counter (``t // T0``) inside ``depositum.step``.
+    iteration counter (``t // T0``) inside ``depositum.step`` — including
+    ``cohort`` schedules, whose per-round active mask both gates the mix
+    and freezes inactive/padding rows of the (padded) client axis.
     """
     if mixer is None:
         operand = schedule

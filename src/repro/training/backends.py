@@ -46,7 +46,10 @@ Mixer = Callable[[Any], Any]
 
 def _plan_kind(plan_or_schedule) -> str:
     """Effective collective kind: a schedule's base plan, a chebyshev
-    plan's base — the thing that decides ppermute vs all_gather."""
+    plan's base — the thing that decides ppermute vs all_gather.  Cohort
+    schedules resolve to their padded dense base, so masked/padded rows
+    ride the ordinary all_gather + row-contraction dispatch (padding rows
+    are identity rows with zero weight in every active contraction)."""
     plan = (plan_or_schedule.plan if isinstance(plan_or_schedule, MixSchedule)
             else plan_or_schedule)
     return plan.base_kind if plan.kind == "chebyshev" else plan.kind

@@ -157,6 +157,29 @@ def _validate_operand(plan, n_clients: int) -> None:
         validate_plan(plan, n_clients)
 
 
+def _metrics_caller(metrics_fn):
+    """Normalise a metrics callback to ``f(state, hyper, plan) -> dict``.
+
+    Two positional parameters (the classic ``metrics_fn(state, hyper)``)
+    stay supported; a third receives the sweep point's mixing operand —
+    cohort metrics need its sampler's eligibility mask to reduce over
+    eligible rows only.  Arity is probed host-side once, outside the trace.
+    """
+    if metrics_fn is None:
+        return lambda state, hyper, plan: {}
+    import inspect
+
+    try:
+        params = [p for p in inspect.signature(metrics_fn).parameters.values()
+                  if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+        wants_plan = len(params) >= 3
+    except (TypeError, ValueError):   # builtins / partials without signature
+        wants_plan = False
+    if wants_plan:
+        return metrics_fn
+    return lambda state, hyper, plan: metrics_fn(state, hyper)
+
+
 def _scanned_run(grad_fn, config, n_clients, metrics_fn, mixer_factory):
     """One sweep point's whole run as a scan over rounds:
     (hyper, plan, params, batches) -> (final_state, per_round_outputs).
@@ -164,6 +187,7 @@ def _scanned_run(grad_fn, config, n_clients, metrics_fn, mixer_factory):
     drift apart.  ``mixer_factory(plan) -> Mixer`` is the backend's
     execution strategy; the plan arrives as a traced operand, never baked
     in."""
+    metrics = _metrics_caller(metrics_fn)
 
     def run_one(hyper, plan, params, batches):
         mixer = mixer_factory(plan)
@@ -173,8 +197,7 @@ def _scanned_run(grad_fn, config, n_clients, metrics_fn, mixer_factory):
             state, _ = local_then_comm_round(
                 state, batches_r, grad_fn, config, mixer, hyper=hyper
             )
-            out = metrics_fn(state, hyper) if metrics_fn is not None else {}
-            return state, out
+            return state, metrics(state, hyper, plan)
 
         return jax.lax.scan(body, state0, batches)
 
@@ -199,10 +222,19 @@ def make_sweep_round(
 ) -> Callable:
     """jit(vmap) of one federated round over the sweep axis.
 
-    Returns ``round_fn(states, hypers, batches) -> (states, aux)`` where
-    ``states`` leaves carry a leading sweep dim.  Use this for streaming
-    loops that cannot pre-stack all rounds of data.  ``mixer`` may be a
-    Mixer closure or a (possibly stacked) MixPlan.
+    Returns ``round_fn(states, hypers, batches, plan=None) -> (states, aux)``
+    where ``states`` leaves carry a leading sweep dim.  Use this for
+    streaming loops that cannot pre-stack all rounds of data.  ``mixer``
+    may be a Mixer closure or a (possibly stacked) MixPlan / MixSchedule.
+
+    The resolved plan is threaded as a **runtime operand** of the jitted
+    round — per the operand contract in ``repro.training.backends``, its
+    leaves are never baked into the closure — so feeding a different
+    same-structure plan via the ``plan=`` argument (a new topology grid, a
+    reseeded cohort) reuses the compiled program instead of retracing, and
+    large stacked W leaves stay out of the program text.  ``hypers`` may be
+    stacked (leaves (S,)) or unstacked — scalars broadcast over the sweep
+    axis exactly as in :func:`sweep_run`.
 
     The default ``batch_axis=0`` matches :func:`broadcast_batches` /
     :func:`sweep_batch_iter`, whose outputs carry a leading (S,) sweep dim;
@@ -210,7 +242,7 @@ def make_sweep_round(
     batches shared across the sweep.
     """
     backend = backend or StackedVmapBackend()
-    legacy, plan, _, _, _, plan_axes = _normalise_operands(
+    legacy, plan0, _, _, _, plan_axes = _normalise_operands(
         mixer, Hyper.create())
     mixer_factory = ((lambda p: legacy) if legacy is not None
                      else backend.mixer_for)
@@ -221,8 +253,19 @@ def make_sweep_round(
         )
 
     vm = jax.vmap(one, in_axes=(0, 0, plan_axes, batch_axis))
-    return jax.jit(lambda states, hypers, batches:
-                   vm(states, hypers, plan, batches))
+    jitted = jax.jit(vm)
+
+    def round_fn(states, hypers, batches, plan=None):
+        plan_arg = plan0 if plan is None else plan
+        # broadcast an unstacked Hyper over the sweep axis (sweep_run's
+        # documented behaviour; states always carry the sweep dim)
+        if jnp.ndim(hypers.alpha) == 0:
+            S = int(jax.tree_util.tree_leaves(states)[0].shape[0])
+            hypers = jax.tree_util.tree_map(
+                lambda v: jnp.broadcast_to(jnp.asarray(v), (S,)), hypers)
+        return jitted(states, hypers, plan_arg, batches)
+
+    return round_fn
 
 
 def sweep_run(
@@ -359,10 +402,15 @@ def sweep_run_fedalg(
     as in :func:`sweep_run`.  Returns (final_state, outs) with a leading
     (S,) dim.
     """
+    if plan is not None:
+        # same Assumption-2 legality gate as sweep_run/sweep_run_sequential:
+        # baseline grids must not silently run an invalid W
+        _validate_operand(plan, n_clients)
     n_extra = max(_mapped_len(params0, params_axis),
                   _mapped_len(batches, batch_axis))
     _, plan_arg, hypers, S, hyper_axes, plan_axes = _normalise_operands(
         plan if plan is not None else MixPlan.identity(), hypers, n_extra)
+    metrics = _metrics_caller(metrics_fn)
 
     def run_one(hyper, plan_s, params, batches):
         state0 = alg.init(params, n_clients)
@@ -372,8 +420,7 @@ def sweep_run_fedalg(
             if plan is not None:
                 kw["plan"] = plan_s
             state, _ = alg.round(state, batches_r, grad_fn, **kw)
-            out = metrics_fn(state, hyper) if metrics_fn is not None else {}
-            return state, out
+            return state, metrics(state, hyper, plan_s)
 
         return jax.lax.scan(body, state0, batches)
 

@@ -42,8 +42,11 @@ class FederatedTrainer:
 
     Mixing resolves in priority order: an explicit ``mixer`` closure, else a
     round-indexed ``schedule`` (:class:`~repro.core.schedule.MixSchedule` —
-    time-varying topologies, partial participation, Chebyshev rounds), else
-    a static plan built from ``cfg.topology``.  With ``backend=None`` the
+    time-varying topologies, partial participation, per-round ``cohort``
+    sampling over a padded client axis, Chebyshev rounds), else a static
+    plan built from ``cfg.topology``.  For a ``cohort`` schedule
+    ``cfg.n_clients`` is the *padded* axis length ``n_max`` (the round
+    program freezes inactive and padding rows).  With ``backend=None`` the
     execution backend is auto-selected from the plan's sparsity and the
     host's devices (:func:`~repro.training.backends.suggest_backend`):
     single-device hosts keep the stacked-vmap simulation, multi-device
@@ -61,6 +64,13 @@ class FederatedTrainer:
         self.W = np.asarray(plan.W)
         self.schedule = schedule
         if schedule is not None:
+            if (schedule.kind == "cohort"
+                    and schedule.sampler.n_max != cfg.n_clients):
+                raise ValueError(
+                    f"cohort schedule pads to n_max="
+                    f"{schedule.sampler.n_max} but cfg.n_clients="
+                    f"{cfg.n_clients}; the trainer's client axis must be "
+                    "the padded length")
             validate_schedule(schedule, cfg.n_clients)
         operand = schedule if schedule is not None else plan
         backend = backend or suggest_backend(operand, cfg.n_clients)

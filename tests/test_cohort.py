@@ -1,0 +1,412 @@
+"""Padded client axis + CohortSampler: the ragged-n tentpole guarantees.
+
+Pins, in order of strictness:
+
+* **bit-exactness** — a full-participation cohort schedule reproduces the
+  static-plan (PR 2/3) trajectories *exactly*: the lazy matrix of an
+  all-active mask is W bit-for-bit and the state gate is a select.
+* **padding equivalence** — a run padded to ``n_max > n`` matches its
+  unpadded reference to numerical tolerance on the active rows, and the
+  padded rows stay frozen (auxiliary variables exactly zero).
+* **sweep equivalence** — one compiled program sweeping
+  ``n_clients x p_active`` over the padded axis equals per-size native
+  sequential references.
+* property tests (hypothesis / tests/_propcheck shim) — sampler
+  determinism and prefix consistency, masked-mixing row-stochasticity.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CohortSampler,
+    DepositumConfig,
+    Hyper,
+    MixPlan,
+    MixSchedule,
+    init as dep_init,
+    local_then_comm_round,
+    mixing_matrix,
+    pad_plan,
+    stack_cohorts,
+    stack_hypers,
+    stack_schedules,
+    stationarity_metrics,
+    validate_schedule,
+)
+from repro.core.schedule import _lazy_dense_matrix, schedule_round_mask
+from repro.training.sweep import sweep_run, sweep_run_sequential
+
+N, D, T0, ROUNDS = 8, 10, 3, 6
+
+
+def linear_problem(n, seed=0, n_total=None):
+    """Least-squares clients; ``n_total`` fixes the data draw so that a
+    smaller problem is an exact row-slice of a larger one (threefry draws
+    are shape-dependent, so per-size generation would change the data)."""
+    key = jax.random.PRNGKey(seed)
+    A = jax.random.normal(key, (n_total or n, 16, D))[:n]
+    w_true = jax.random.normal(jax.random.fold_in(key, 1), (D,))
+    b = jnp.einsum("nmd,d->nm", A, w_true)
+
+    def grad_fn(w_stacked, batch):
+        r = jnp.einsum("nmd,nd->nm", A, w_stacked[:n]) - b
+        g = jnp.einsum("nmd,nm->nd", A, r) / A.shape[1]
+        pad = w_stacked.shape[0] - n
+        if pad:
+            g = jnp.concatenate([g, jnp.zeros((pad, D), g.dtype)])
+        return g, {}
+
+    return grad_fn
+
+
+def _run_rounds(state, grad_fn, cfg, mixer, rounds=ROUNDS, hyper=None):
+    for _ in range(rounds):
+        state, _ = local_then_comm_round(
+            state, jnp.zeros((T0, 1)), grad_fn, cfg, mixer, hyper=hyper)
+    return state
+
+
+def _assert_states_equal(a, b, n=None, **tol):
+    for name in ("x", "y", "nu", "mu", "g"):
+        va, vb = np.asarray(getattr(a, name)), np.asarray(getattr(b, name))
+        if n is not None:
+            va = va[:n]
+        if tol:
+            np.testing.assert_allclose(va, vb, err_msg=f"leaf {name}", **tol)
+        else:
+            np.testing.assert_array_equal(va, vb, err_msg=f"leaf {name}")
+
+
+# ---------------------------------------------------------------------------
+# CohortSampler draws
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1000),
+       r=st.integers(min_value=0, max_value=50),
+       p=st.floats(min_value=0.0, max_value=1.0))
+def test_sampler_deterministic_and_bounded(seed, r, p):
+    s = CohortSampler.bernoulli(p, N, seed=seed)
+    m1, m2 = np.asarray(s.mask_at(r)), np.asarray(s.mask_at(r))
+    np.testing.assert_array_equal(m1, m2)  # redraw is deterministic
+    assert set(np.unique(m1)) <= {0.0, 1.0}
+    if p == 0.0:
+        assert m1.sum() == 0
+    if p == 1.0:
+        assert m1.sum() == N
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1000),
+       r=st.integers(min_value=0, max_value=50),
+       k=st.integers(min_value=1, max_value=N))
+def test_fixed_size_sampler_draws_exactly_k(seed, r, k):
+    s = CohortSampler.fixed_size(k, N, seed=seed)
+    assert np.asarray(s.mask_at(r)).sum() == k
+    # clamped when fewer clients are eligible
+    s2 = CohortSampler.fixed_size(k, N, seed=seed, n_eff=max(1, k // 2))
+    assert np.asarray(s2.mask_at(r)).sum() == min(k, max(1, k // 2))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1000),
+       r=st.integers(min_value=0, max_value=20))
+def test_sampler_prefix_consistency(seed, r):
+    """Padding a sampler to a larger n_max must not change the draw on the
+    shared prefix — this is what makes padded runs reproduce their
+    unpadded references."""
+    small = CohortSampler.bernoulli(0.6, N, seed=seed)
+    padded = CohortSampler.bernoulli(0.6, 4 * N, seed=seed, n_eff=N)
+    mp = np.asarray(padded.mask_at(r))
+    np.testing.assert_array_equal(mp[:N], np.asarray(small.mask_at(r)))
+    assert mp[N:].sum() == 0  # ineligible rows never activate
+
+
+def test_sampler_masks_vary_over_rounds():
+    s = CohortSampler.bernoulli(0.5, 32, seed=0)
+    masks = np.stack([np.asarray(s.mask_at(r)) for r in range(8)])
+    assert len({m.tobytes() for m in masks}) > 1
+
+
+def test_sampler_constructor_guards():
+    with pytest.raises(ValueError):
+        CohortSampler.bernoulli(1.5, N)
+    with pytest.raises(ValueError):
+        CohortSampler.bernoulli(0.5, N, n_eff=N + 1)
+    with pytest.raises(ValueError):
+        CohortSampler.fixed_size(0, N)
+    with pytest.raises(ValueError):
+        CohortSampler.full(0)
+    with pytest.raises(TypeError):
+        MixSchedule.cohort(MixPlan.from_topology("ring", N), object())
+    with pytest.raises(ValueError):  # circulant bases don't pad
+        MixSchedule.cohort(MixPlan.circulant([(1, 0.5)], self_weight=0.5),
+                           CohortSampler.full(N))
+    with pytest.raises(ValueError):  # plan size != sampler n_max
+        MixSchedule.cohort(MixPlan.from_topology("ring", N),
+                           CohortSampler.full(N, n_max=2 * N))
+
+
+def test_stack_cohorts_and_point_roundtrip():
+    samplers = [CohortSampler.bernoulli(p, N, seed=i, n_eff=n)
+                for i, (p, n) in enumerate([(0.5, 4), (1.0, 8), (0.8, 6)])]
+    stacked = stack_cohorts(samplers)
+    assert stacked.is_stacked and stacked.n_sweep == 3
+    for s, ref in enumerate(samplers):
+        got = stacked.point(s)
+        for r in range(3):
+            np.testing.assert_array_equal(np.asarray(got.mask_at(r)),
+                                          np.asarray(ref.mask_at(r)))
+    with pytest.raises(ValueError):  # heterogeneous n_max refuses
+        stack_cohorts([samplers[0], CohortSampler.bernoulli(0.5, 2 * N)])
+
+
+# ---------------------------------------------------------------------------
+# Masked mixing algebra
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1000))
+def test_lazy_matrix_row_stochastic_and_identity_on_inactive(seed):
+    """For any mask, the in-trace lazy matrix keeps every row stochastic
+    (active rows re-absorb dropped mass) and inactive rows are exactly
+    identity rows."""
+    rng = np.random.default_rng(seed)
+    topo = ["ring", "complete", "star", "torus"][seed % 4]
+    W = jnp.asarray(mixing_matrix(topo, N))
+    a = jnp.asarray((rng.random(N) < rng.random()).astype(np.float32))
+    Wt = np.asarray(_lazy_dense_matrix(W, a))
+    np.testing.assert_allclose(Wt.sum(axis=1), np.ones(N), atol=1e-6)
+    for i in np.flatnonzero(np.asarray(a) == 0):
+        row = np.zeros(N)
+        row[i] = 1.0
+        np.testing.assert_allclose(Wt[i], row, atol=1e-6)
+    # all-active reproduces W bit-for-bit (the bit-exactness pin's engine)
+    np.testing.assert_array_equal(
+        np.asarray(_lazy_dense_matrix(W, jnp.ones(N))), np.asarray(W))
+
+
+# ---------------------------------------------------------------------------
+# Round-program semantics
+# ---------------------------------------------------------------------------
+
+def test_all_active_cohort_bitexact_vs_constant_schedule():
+    """Full participation (mask all-ones) must reproduce the PR-3
+    constant-schedule trajectory EXACTLY: the lazy matrix equals W
+    bit-for-bit and the freeze gate is a select of the new values."""
+    grad_fn = linear_problem(N)
+    cfg = DepositumConfig(comm_period=T0, alpha=0.05)
+    plan = MixPlan.from_topology("ring", N)
+
+    ref = _run_rounds(dep_init(jnp.zeros(D), N), grad_fn, cfg,
+                      MixSchedule.constant(plan))
+    for sampler in (CohortSampler.full(N),
+                    CohortSampler.bernoulli(1.0, N, seed=9)):
+        got = _run_rounds(dep_init(jnp.zeros(D), N), grad_fn, cfg,
+                          MixSchedule.cohort(plan, sampler))
+        _assert_states_equal(got, ref)
+
+
+def test_padded_full_cohort_matches_unpadded_reference():
+    """n_active = n inside a 2n-padded axis: active rows match the
+    unpadded constant-schedule run to numerical tolerance (the padded
+    contraction sums extra exact zeros, so only summation order differs)."""
+    grad_fn = linear_problem(N)
+    cfg = DepositumConfig(comm_period=T0, alpha=0.05)
+    plan = MixPlan.from_topology("ring", N)
+
+    ref = _run_rounds(dep_init(jnp.zeros(D), N), grad_fn, cfg,
+                      MixSchedule.constant(plan))
+    sched = MixSchedule.cohort(pad_plan(plan, 2 * N),
+                               CohortSampler.full(N, n_max=2 * N))
+    got = _run_rounds(dep_init(jnp.zeros(D), N, n_max=2 * N), grad_fn, cfg,
+                      sched)
+    _assert_states_equal(got, ref, n=N, rtol=2e-5, atol=1e-6)
+
+
+def test_padded_partial_cohort_matches_unpadded_reference():
+    """Bernoulli sampling through the padded axis == the same sampling on
+    the native axis (prefix-consistent draws make the masks identical)."""
+    grad_fn = linear_problem(N)
+    cfg = DepositumConfig(comm_period=T0, alpha=0.05)
+    plan = MixPlan.from_topology("ring", N)
+
+    ref = _run_rounds(
+        dep_init(jnp.zeros(D), N), grad_fn, cfg,
+        MixSchedule.cohort(plan, CohortSampler.bernoulli(0.6, N, seed=4)))
+    got = _run_rounds(
+        dep_init(jnp.zeros(D), N, n_max=2 * N), grad_fn, cfg,
+        MixSchedule.cohort(
+            pad_plan(plan, 2 * N),
+            CohortSampler.bernoulli(0.6, 2 * N, seed=4, n_eff=N)))
+    _assert_states_equal(got, ref, n=N, rtol=2e-5, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=100),
+       p=st.floats(min_value=0.2, max_value=1.0))
+def test_padded_rows_stay_frozen(seed, p):
+    """Property: padding rows never move — auxiliary variables stay
+    exactly zero and x keeps its initial value bit-for-bit."""
+    n_max = 2 * N
+    grad_fn = linear_problem(N, seed=seed)
+    cfg = DepositumConfig(comm_period=T0, alpha=0.05)
+    sched = MixSchedule.cohort(
+        pad_plan(MixPlan.from_topology("ring", N), n_max),
+        CohortSampler.bernoulli(p, n_max, seed=seed, n_eff=N))
+    state = _run_rounds(dep_init(jnp.zeros(D), N, n_max=n_max), grad_fn,
+                        cfg, sched, rounds=3)
+    for name in ("y", "nu", "mu", "g"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(state, name))[N:], 0.0,
+            err_msg=f"padded rows of {name} moved")
+    np.testing.assert_array_equal(np.asarray(state.x)[N:], 0.0)
+
+
+def test_schedule_round_mask_only_gates_cohort():
+    plan = MixPlan.from_topology("ring", N)
+    assert schedule_round_mask(MixSchedule.constant(plan), 0) is None
+    assert schedule_round_mask(MixSchedule.lazy(plan, 0.5, ROUNDS), 0) is None
+    assert schedule_round_mask(MixSchedule.lazy(plan, 0.5), 0) is None
+    m = schedule_round_mask(
+        MixSchedule.cohort(plan, CohortSampler.bernoulli(0.5, N, seed=1)), 2)
+    np.testing.assert_array_equal(
+        np.asarray(m),
+        np.asarray(CohortSampler.bernoulli(0.5, N, seed=1).mask_at(2)))
+
+
+def test_inactive_clients_freeze_for_whole_round():
+    """A cohort round leaves every state variable of an inactive client
+    bit-identical — including through the T0-1 local steps."""
+    grad_fn = linear_problem(N)
+    cfg = DepositumConfig(comm_period=T0, alpha=0.05)
+    plan = MixPlan.from_topology("ring", N)
+    sampler = CohortSampler.bernoulli(0.5, N, seed=11)
+    sched = MixSchedule.cohort(plan, sampler)
+
+    state = _run_rounds(dep_init(jnp.zeros(D), N), grad_fn, cfg, sched,
+                        rounds=2)
+    before = state
+    mask = np.asarray(sampler.mask_at(2))  # the round about to run
+    assert 0 < mask.sum() < N, "seed must give a proper subset"
+    state, _ = local_then_comm_round(state, jnp.zeros((T0, 1)), grad_fn,
+                                     cfg, sched)
+    idle = np.flatnonzero(mask == 0)
+    for name in ("x", "y", "nu", "mu", "g"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(state, name))[idle],
+            np.asarray(getattr(before, name))[idle],
+            err_msg=f"inactive rows of {name} moved")
+    active = np.flatnonzero(mask == 1)
+    assert float(np.abs(np.asarray(state.x)[active]
+                        - np.asarray(before.x)[active]).max()) > 0
+
+
+# ---------------------------------------------------------------------------
+# The n_clients x p_active sweep (tentpole acceptance, stacked-vmap side)
+# ---------------------------------------------------------------------------
+
+COHORT_GRID = [(4, 1.0), (4, 0.5), (8, 1.0), (8, 0.7), (6, 0.5)]
+N_MAX = 8
+
+
+def _cohort_grid_schedules(seed=5):
+    return [MixSchedule.cohort(
+        pad_plan(MixPlan.from_topology("ring", n), N_MAX),
+        CohortSampler.bernoulli(p, N_MAX, seed=seed, n_eff=n))
+        for n, p in COHORT_GRID]
+
+
+def test_n_times_p_sweep_matches_native_references():
+    """One compiled program sweeps 3 distinct effective sizes x p_active
+    over the padded axis; every point matches a per-size NATIVE run (no
+    padding at all) to numerical tolerance."""
+    assert len({n for n, _ in COHORT_GRID}) >= 3
+    grad_fn = linear_problem(N_MAX)
+    cfg = DepositumConfig(comm_period=T0, alpha=0.05)
+    grid = stack_schedules(_cohort_grid_schedules())
+    validate_schedule(grid, N_MAX)
+    h = Hyper.create(alpha=0.05)
+    hypers = stack_hypers([h] * len(COHORT_GRID))
+    batches = jnp.zeros((ROUNDS, T0, 1))
+
+    def metrics_fn(state, hyper, operand):
+        w = operand.sampler.eligible()
+        return {"cons": jnp.sum(
+            w[:, None] * (state.x - jnp.einsum(
+                "i,id->d", w / jnp.sum(w), state.x)[None]) ** 2)}
+
+    fs, outs = sweep_run(jnp.zeros(D), grad_fn, cfg, grid, hypers, batches,
+                         n_clients=N_MAX, metrics_fn=metrics_fn)
+    assert outs["cons"].shape == (len(COHORT_GRID), ROUNDS)
+
+    for s, (n, p) in enumerate(COHORT_GRID):
+        native_grad = linear_problem(n, n_total=N_MAX)
+        native = _run_rounds(
+            dep_init(jnp.zeros(D), n), native_grad, cfg,
+            MixSchedule.cohort(MixPlan.from_topology("ring", n),
+                               CohortSampler.bernoulli(p, n, seed=5)),
+            hyper=h)
+        np.testing.assert_allclose(
+            np.asarray(fs.x)[s, :n], np.asarray(native.x),
+            rtol=2e-5, atol=1e-6, err_msg=f"point (n={n}, p={p})")
+
+
+def test_cohort_sweep_vmap_equals_sequential():
+    """The vmapped cohort grid == the serial per-point loop (both through
+    the engine, 3-arg metrics on both paths)."""
+    grad_fn = linear_problem(N_MAX)
+    cfg = DepositumConfig(comm_period=T0, alpha=0.05)
+    grid = stack_schedules(_cohort_grid_schedules())
+    hypers = stack_hypers([Hyper.create(alpha=0.05)] * len(COHORT_GRID))
+    batches = jnp.zeros((ROUNDS, T0, 1))
+
+    def metrics_fn(state, hyper, operand):
+        w = operand.sampler.eligible()
+        return {"xm": jnp.einsum("i,id->d", w / jnp.sum(w), state.x)}
+
+    fs, outs = sweep_run(jnp.zeros(D), grad_fn, cfg, grid, hypers, batches,
+                         n_clients=N_MAX, metrics_fn=metrics_fn)
+    fseq, outseq = sweep_run_sequential(
+        jnp.zeros(D), grad_fn, cfg, grid, hypers, batches,
+        n_clients=N_MAX, metrics_fn=metrics_fn)
+    _assert_states_equal(fs, fseq, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(outs["xm"]),
+                               np.asarray(outseq["xm"]),
+                               rtol=2e-5, atol=1e-6)
+
+
+def test_masked_stationarity_metrics_match_unpadded():
+    """stationarity_metrics(weights=eligibility) on a padded state ==
+    plain metrics on the unpadded slice."""
+    grad_fn = linear_problem(N)
+    cfg = DepositumConfig(comm_period=T0, alpha=0.05)
+    plan = MixPlan.from_topology("ring", N)
+    sched = MixSchedule.cohort(pad_plan(plan, 2 * N),
+                               CohortSampler.full(N, n_max=2 * N))
+    state = _run_rounds(dep_init(jnp.zeros(D), N, n_max=2 * N), grad_fn,
+                        cfg, sched)
+
+    def grads_at(x):
+        return grad_fn(x, None)[0]
+
+    padded = stationarity_metrics(
+        state, {"global_at": grads_at, "local_at": grads_at}, cfg,
+        weights=CohortSampler.full(N, n_max=2 * N).eligible())
+
+    unpadded_state = jax.tree_util.tree_map(
+        lambda v: v[:N] if jnp.ndim(v) else v, state)
+    grad_fn_n = linear_problem(N)
+
+    def grads_at_n(x):
+        return grad_fn_n(x, None)[0]
+
+    ref = stationarity_metrics(
+        unpadded_state, {"global_at": grads_at_n, "local_at": grads_at_n},
+        cfg)
+    for key in ref:
+        np.testing.assert_allclose(float(padded[key]), float(ref[key]),
+                                   rtol=2e-4, atol=1e-7, err_msg=key)

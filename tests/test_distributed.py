@@ -327,6 +327,87 @@ def test_schedule_sweep_vmap_of_shardmap():
     assert "OK" in out
 
 
+def test_cohort_schedule_shardmap_equals_stacked_vmap():
+    """Cohort schedules (padded client axis, on-device per-round sampling)
+    on the shard_map backend must equal the stacked-vmap simulation —
+    sampler masks are redrawn identically on every shard from the
+    replicated key, and the round program freezes inactive/padding rows
+    identically on both paths.  Full participation must stay bit-exact
+    against the constant schedule."""
+    out = run_py(textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import functools
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import (CohortSampler, DepositumConfig, MixPlan,
+                                MixSchedule, init as dep_init,
+                                local_then_comm_round, mixing_matrix,
+                                pad_plan)
+        from repro.training.backends import get_backend
+
+        N_MAX, N_EFF, D, T0, ROUNDS = 8, 5, 12, 3, 5
+        key = jax.random.PRNGKey(0)
+        A = jax.random.normal(key, (N_MAX, 16, D))
+        b = jnp.einsum("nmd,d->nm", A,
+                       jax.random.normal(jax.random.fold_in(key, 1), (D,)))
+        def grad_fn(w, batch):
+            r = jnp.einsum("nmd,nd->nm", A, w) - b
+            return jnp.einsum("nmd,nm->nd", A, r) / 16, {}
+        cfg = DepositumConfig(alpha=0.05, beta=1.0, gamma=0.5,
+                              momentum="polyak", comm_period=T0,
+                              prox_name="l1", prox_kwargs={"lam": 1e-3})
+        mesh = jax.make_mesh((8,), ("clients",))
+        be = get_backend("shard_map", mesh=mesh, axis_name="clients",
+                         n_clients=N_MAX)
+
+        W = mixing_matrix("ring", N_MAX)
+        scheds = {
+          "full": MixSchedule.cohort(MixPlan.dense(W),
+                                     CohortSampler.full(N_MAX)),
+          "bernoulli": MixSchedule.cohort(
+              MixPlan.dense(W),
+              CohortSampler.bernoulli(0.6, N_MAX, seed=3)),
+          "fixed": MixSchedule.cohort(
+              MixPlan.dense(W),
+              CohortSampler.fixed_size(3, N_MAX, seed=5)),
+          "padded": MixSchedule.cohort(
+              pad_plan(MixPlan.from_topology("ring", N_EFF), N_MAX),
+              CohortSampler.bernoulli(0.7, N_MAX, seed=9, n_eff=N_EFF)),
+        }
+
+        def run(mixer, n_eff=None):
+            st = dep_init(jnp.zeros(D), n_eff or N_MAX,
+                          n_max=N_MAX if n_eff else None)
+            rnd = jax.jit(functools.partial(
+                local_then_comm_round, grad_fn=grad_fn, config=cfg,
+                mixer=mixer))
+            for _ in range(ROUNDS):
+                st, _ = rnd(st, batches=jnp.zeros((T0, 1)))
+            return st
+
+        for name, s in scheds.items():
+            n_eff = N_EFF if name == "padded" else None
+            got = run(be.mixer_for(s), n_eff)
+            ref = run(s, n_eff)  # stacked-vmap apply_schedule
+            err = max(float(jnp.max(jnp.abs(a - c)))
+                      for a, c in zip(jax.tree_util.tree_leaves(got)[:5],
+                                      jax.tree_util.tree_leaves(ref)[:5]))
+            assert err < 1e-5, (name, err)
+            if name == "padded":  # padding rows frozen on the shard path too
+                assert float(jnp.abs(got.y[N_EFF:]).max()) == 0.0
+                assert float(jnp.abs(got.x[N_EFF:]).max()) == 0.0
+
+        const = run(be.mixer_for(MixSchedule.constant(MixPlan.dense(W))))
+        full = run(be.mixer_for(scheds["full"]))
+        err = max(float(jnp.max(jnp.abs(a - c)))
+                  for a, c in zip(jax.tree_util.tree_leaves(full)[:5],
+                                  jax.tree_util.tree_leaves(const)[:5]))
+        assert err == 0.0, f"full cohort not bit-exact on shard_map: {err}"
+        print("OK")
+    """))
+    assert "OK" in out
+
+
 def test_tiny_dryrun_mesh_compiles():
     """A miniature dry-run (2x4 mesh, reduced arch) exercises the launch
     path end-to-end inside a subprocess."""

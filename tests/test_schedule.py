@@ -518,3 +518,69 @@ def test_schedule_constructor_rejections():
     with pytest.raises(ValueError):
         MixSchedule.constant(MixPlan.dense(
             np.stack([mixing_matrix("ring", N)] * 2)))  # stacked plan
+
+
+def test_lazy_on_device_draw_matches_host_predraw():
+    """Seeded equivalence of the two lazy forms: ``rounds=None`` (sampler
+    redraws each round's mask on device inside the scan) must reproduce a
+    host-side pre-drawn ``(R, n)`` schedule built from the SAME sampler's
+    masks — bit for bit, since both route through the one lazy matrix."""
+    plan = MixPlan.dense(mixing_matrix("ring", N))
+    sched_dev = MixSchedule.lazy(plan, 0.5, seed=7)
+    assert sched_dev.active is None and sched_dev.sampler is not None
+    assert sched_dev.n_rounds is None
+
+    masks = jnp.stack([sched_dev.sampler.mask_at(r) for r in range(ROUNDS)])
+    assert 0 < float(masks.sum()) < ROUNDS * N  # a non-trivial draw
+    sched_host = MixSchedule(kind="lazy", plan=plan, active=masks)
+
+    got, ref = _run_rounds(sched_dev), _run_rounds(sched_host)
+    for name in ("x", "y", "nu", "mu", "g"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, name)), np.asarray(getattr(ref, name)),
+            err_msg=f"leaf {name} not bit-exact")
+
+
+def test_lazy_on_device_rejects_host_rng():
+    with pytest.raises(ValueError):
+        MixSchedule.lazy(MixPlan.dense(mixing_matrix("ring", N)), 0.5,
+                         rng=np.random.default_rng(0))
+
+
+def test_validate_schedule_caps_densification(monkeypatch):
+    """``validate_schedule(rounds=None)`` must sample at most
+    VALIDATE_ROUNDS_CAP rounds per sweep point — unbounded (sampler-driven)
+    and R-huge schedules would otherwise densify one matrix per round."""
+    import repro.core.schedule as sched_mod
+
+    calls = []
+    real = sched_mod.validate_plan
+    monkeypatch.setattr(sched_mod, "validate_plan",
+                        lambda *a, **k: calls.append(1) or real(*a, **k))
+
+    plan = MixPlan.dense(mixing_matrix("ring", N))
+    cap = sched_mod.VALIDATE_ROUNDS_CAP
+
+    # +1: lazy/cohort schedules also validate the BASE plan directly (the
+    # per-round lazy matrices are row-stochastic by construction)
+    validate_schedule(MixSchedule.lazy(plan, 0.5, seed=3), N)  # unbounded
+    assert len(calls) == cap + 1
+    calls.clear()
+    validate_schedule(MixSchedule.lazy(plan, 0.5, rounds=10 * cap), N)
+    assert len(calls) == cap + 1
+    calls.clear()
+    # explicit rounds= overrides the cap in either direction
+    validate_schedule(MixSchedule.lazy(plan, 0.5, seed=3), N, rounds=3)
+    assert len(calls) == 3 + 1
+
+
+def test_validate_schedule_rejects_defective_cohort_base():
+    """A cohort/lazy base plan whose rows don't sum to 1 must be rejected
+    host-side even though every per-round lazy matrix re-normalises."""
+    from repro.core import CohortSampler
+    bad = MixPlan.dense(jnp.eye(N) * 2.0)
+    with pytest.raises(ValueError):
+        validate_schedule(
+            MixSchedule.cohort(bad, CohortSampler.full(N)), N)
+    with pytest.raises(ValueError):
+        validate_schedule(MixSchedule.lazy(bad, 0.5, seed=1), N)

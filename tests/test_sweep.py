@@ -379,6 +379,84 @@ def test_server_algorithms_reject_topology_plan():
                 plan=MixPlan.from_topology("ring", N))
 
 
+def test_make_sweep_round_plan_is_runtime_operand():
+    """Swapping same-structure plans must NOT retrace the streaming round
+    (regression: the plan used to be baked into the jit closure, violating
+    the operand contract in training.backends — every new topology grid
+    recompiled and stacked W leaves became program constants)."""
+    cfg = DepositumConfig(momentum="polyak", comm_period=T0, prox_name="l1",
+                          prox_kwargs={"lam": 1e-3})
+    base = linear_problem()
+    traces = []
+
+    def grad_fn(x, batch):
+        traces.append(1)  # trace-time side effect: counts compilations
+        return base(x, batch)
+
+    plans_a = stack_mixplans([MixPlan.from_topology("ring", N)] * 2)
+    plans_b = stack_mixplans([MixPlan.from_topology("complete", N)] * 2)
+    hypers = stack_hypers([Hyper.create(alpha=0.05, lam=1e-3)] * 2)
+    states = sweep_init(jnp.zeros(D), N, 2)
+    b = broadcast_batches(jnp.zeros((T0, 1)), 2)
+
+    round_fn = make_sweep_round(grad_fn, cfg, plans_a, batch_axis=0)
+    s_ring, _ = round_fn(states, hypers, b)
+    one_trace = sum(traces)
+    s_complete, _ = round_fn(states, hypers, b, plan=plans_b)
+    assert sum(traces) == one_trace, (
+        f"plan swap retraced ({sum(traces)} trace events after swap vs "
+        f"{one_trace} for one compile)")
+    # and the swapped plan is actually used, not a stale constant
+    assert float(jnp.max(jnp.abs(s_ring.x - s_complete.x))) > 1e-8
+    # the complete-graph round must equal running with that plan directly
+    direct = make_sweep_round(base, cfg, plans_b, batch_axis=0)
+    s_direct, _ = direct(states, hypers, b)
+    np.testing.assert_allclose(np.asarray(s_complete.x),
+                               np.asarray(s_direct.x), rtol=1e-6, atol=1e-7)
+
+
+def test_make_sweep_round_accepts_unstacked_hyper():
+    """A scalar Hyper must broadcast over the sweep axis exactly as in
+    sweep_run (regression: hard-coded in_axes=0 crashed inside vmap)."""
+    grad_fn = linear_problem()
+    cfg = DepositumConfig(momentum="polyak", comm_period=T0, prox_name="l1",
+                          prox_kwargs={"lam": 1e-3})
+    plans = stack_mixplans([MixPlan.from_topology("ring", N),
+                            MixPlan.from_topology("star", N)])
+    h = Hyper.create(alpha=0.05, beta=1.0, gamma=0.5, lam=1e-3)
+    states = sweep_init(jnp.zeros(D), N, 2)
+    b = broadcast_batches(jnp.zeros((T0, 1)), 2)
+
+    round_fn = make_sweep_round(grad_fn, cfg, plans, batch_axis=0)
+    s_scalar, _ = round_fn(states, h, b)                 # used to raise
+    s_stacked, _ = round_fn(states, stack_hypers([h, h]), b)
+    np.testing.assert_allclose(np.asarray(s_scalar.x),
+                               np.asarray(s_stacked.x), rtol=0, atol=0)
+
+
+def test_fedalg_sweep_applies_mixing_gate():
+    """sweep_run_fedalg must apply the same Assumption-2 legality gate as
+    sweep_run (regression: an invalid W silently ran for baseline grids)."""
+    from repro.core.fedopt import FedAlgConfig, make_algorithm
+
+    grad_fn = linear_problem()
+    cfg = FedAlgConfig(alpha=0.1, local_steps=T0, prox_name="l1",
+                       prox_kwargs={"lam": 1e-3}, W=mixing_matrix("ring", N))
+    a = make_algorithm("dsgd", cfg)
+    bad = MixPlan.dense(jnp.eye(N) * 2.0)  # rows sum to 2: not stochastic
+    with pytest.raises(ValueError):
+        sweep_run_fedalg(a, jnp.zeros(D), grad_fn,
+                         Hyper.create(alpha=0.1, lam=1e-3),
+                         jnp.zeros((ROUNDS, T0, 1)), n_clients=N, plan=bad)
+    # stacked grids are gated per point too
+    good = MixPlan.from_topology("ring", N)
+    with pytest.raises(ValueError):
+        sweep_run_fedalg(a, jnp.zeros(D), grad_fn,
+                         Hyper.create(alpha=0.1, lam=1e-3),
+                         jnp.zeros((ROUNDS, T0, 1)), n_clients=N,
+                         plan=stack_mixplans([good, bad]))
+
+
 def test_stack_rounds_and_metrics_shapes():
     grad_fn = linear_problem()
     cfg = DepositumConfig(momentum="polyak", comm_period=T0, prox_name="l1",
