@@ -1,6 +1,11 @@
 """Diff two dry-run JSONs (baseline vs optimized) for §Perf records.
 
     PYTHONPATH=src python -m benchmarks.perf_diff base.json variant.json
+
+Also accepts two BENCH_sweep.json snapshots: when both carry a
+``kernel_fused_sweep`` section the kernel timings are diffed instead —
+blocked per-iteration wall AND dispatch-only times side by side (the two
+numbers ``kernel_bench._time`` now reports; blocked is the honest one).
 """
 from __future__ import annotations
 
@@ -17,9 +22,30 @@ def fmt(v):
     return f"{v:.4g}" if isinstance(v, float) else str(v)
 
 
+def diff_kernel_section(a: dict, b: dict, lines: list) -> str:
+    """Diff ``kernel_fused_sweep`` sections of two BENCH_sweep snapshots."""
+    ka, kb = a["kernel_fused_sweep"], b["kernel_fused_sweep"]
+    for key in ("fused_us_blocked", "fused_us_dispatch",
+                "unfused_us_blocked", "unfused_us_dispatch",
+                "speedup_measured", "hbm_sweep_ratio_model",
+                "achieved_gbps", "roofline_fraction"):
+        va, vb = ka.get(key, 0), kb.get(key, 0)
+        ratio = (va / vb) if vb else float("inf")
+        lines.append(f"{key:22s} {fmt(va):>12s} -> {fmt(vb):>12s}"
+                     f"   ({ratio:.2f}x)")
+    for meta in ("S", "C", "d", "backend"):
+        if ka.get(meta) != kb.get(meta):
+            lines.append(f"WARNING: {meta} differs "
+                         f"({ka.get(meta)} -> {kb.get(meta)}) — "
+                         "timings not comparable")
+    return "\n".join(lines)
+
+
 def diff(a_path: str, b_path: str) -> str:
     a, b = load(a_path), load(b_path)
     lines = [f"baseline:  {a_path}", f"variant:   {b_path}", ""]
+    if "kernel_fused_sweep" in a and "kernel_fused_sweep" in b:
+        return diff_kernel_section(a, b, lines)
     ra, rb = a["roofline"], b["roofline"]
     for key in ("t_compute_s", "t_memory_s", "t_collective_s",
                 "step_lower_bound_s", "useful_flops_ratio"):

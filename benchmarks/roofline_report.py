@@ -82,14 +82,52 @@ def to_markdown(rows) -> str:
     return "\n".join(out)
 
 
+def kernel_sweep_report(bench_path: str) -> str:
+    """Achieved-vs-roofline lines for the sweep-major fused update kernel,
+    read from the ``kernel_fused_sweep`` section ``benchmarks/run.py``
+    merges into BENCH_sweep.json.  Empty string when the section (or the
+    file) is absent."""
+    try:
+        with open(bench_path) as f:
+            sec = json.load(f).get("kernel_fused_sweep")
+    except (OSError, json.JSONDecodeError):
+        return ""
+    if not sec:
+        return ""
+    hw_note = ("Mosaic/TPU — roofline fraction is real"
+               if sec.get("backend") == "tpu"
+               else "CPU interpret — roofline fraction documents the "
+                    "interpreter, not the HW")
+    return "\n".join([
+        "",
+        "## fused sweep kernel (kernel_fused_sweep)",
+        f"grid (S, C, d) = ({sec['S']}, {sec['C']}, {sec['d']}), "
+        f"backend {sec['backend']} ({hw_note})",
+        f"blocked us/iter: fused {sec['fused_us_blocked']}, "
+        f"unfused {sec['unfused_us_blocked']} "
+        f"(measured speedup {sec['speedup_measured']}x)",
+        f"model HBM sweeps: {sec['model_bytes_unfused'] / 2**20:.2f} MiB -> "
+        f"{sec['model_bytes_fused'] / 2**20:.2f} MiB "
+        f"({sec['hbm_sweep_ratio_model']}x fewer bytes)",
+        f"achieved {sec['achieved_gbps']} GB/s = "
+        f"{sec['roofline_fraction']:.4%} of the HBM roofline",
+    ])
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--mixer", default="dense")
+    ap.add_argument("--bench", default="BENCH_sweep.json",
+                    help="BENCH_sweep.json with a kernel_fused_sweep "
+                         "section (skipped if absent)")
     args = ap.parse_args()
     rows = load_all(args.dir, args.mesh, args.mixer)
     print(to_markdown(rows))
+    ks = kernel_sweep_report(args.bench)
+    if ks:
+        print(ks)
     worst = sorted((r for r in rows if not r.get("error")),
                    key=lambda r: r["useful_ratio"])[:5]
     print("\nworst useful-FLOP ratios:",

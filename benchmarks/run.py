@@ -183,9 +183,18 @@ def main() -> None:
 
     if wanted("kernel_bench"):
         from benchmarks import kernel_bench as m
-        for name, us, src in m.run():
+        for name, us, src in m.run(quick=args.quick):
             lines.append(f"kernel/{name},{us:.1f},{src}")
             print(lines[-1], flush=True)
+        # sweep-major fused update vs jnp reference + roofline model; merged
+        # into BENCH_sweep.json alongside the figure-grid sections
+        sec = m.fused_sweep_section(quick=args.quick)
+        bench_sweep["kernel_fused_sweep"] = sec
+        lines.append(
+            f"kernel/fused_sweep,{sec['fused_us_blocked']:.1f},"
+            f"model HBM ratio {sec['hbm_sweep_ratio_model']:.2f}x "
+            f"roofline {sec['roofline_fraction']:.4f} ({sec['backend']})")
+        print(lines[-1], flush=True)
 
     with open(os.path.join(args.out, "summary.csv"), "w") as f:
         f.write("\n".join(lines) + "\n")
@@ -202,6 +211,12 @@ def main() -> None:
         assert "cohort_grid" in bench_sweep, \
             "fig_cohort ran but BENCH_sweep.json gained no " \
             "cohort_grid section"
+    if wanted("kernel_bench") and args.quick:
+        # CI contract: the kernel job's quick run must record the
+        # sweep-major fused-kernel section
+        assert "kernel_fused_sweep" in bench_sweep, \
+            "kernel_bench ran but BENCH_sweep.json gained no " \
+            "kernel_fused_sweep section"
 
     if bench_sweep:  # at least one ratio measured
         bench_path = os.path.join(_ROOT, "BENCH_sweep.json")

@@ -46,6 +46,53 @@ def roofline_terms(
     return terms
 
 
+def fused_sweep_traffic(d: int, S: int, C: int, *, dtype_bytes: int = 4,
+                        padded: int | None = None) -> dict:
+    """HBM-traffic / FLOP model for the sweep-major fused DEPOSITUM update.
+
+    The fused Pallas kernel reads {x, y, nu} and writes {x', nu'} exactly
+    once per element — 5 array sweeps over the whole (S, C, d) grid.  The
+    unfused jnp sequence materialises the momentum and the prox argument
+    between HLOs: read {y, nu} write nu' (3 sweeps), read {x, nu'} write
+    the shifted point (3), read it back and write x' (2) — 8 sweeps.
+    FLOPs per element: 3 (momentum axpy) + 2 (prox shift) + ~4 (soft
+    threshold select chain) = 9; the kernel is memory-bound by two orders
+    of magnitude, so the ratio of sweeps IS the predicted speedup.
+
+    ``padded`` (elements per client after lane/sublane padding, e.g.
+    ``sweep_layout(d).padded``) gives the bytes the kernel actually moves;
+    defaults to the logical ``d``.
+    """
+    n = float(S) * C * (padded if padded is not None else d)
+    fused_bytes = 5.0 * n * dtype_bytes
+    unfused_bytes = 8.0 * n * dtype_bytes
+    flops = 9.0 * n
+    return {
+        "elements": n,
+        "fused_bytes": fused_bytes,
+        "unfused_bytes": unfused_bytes,
+        "hbm_sweep_ratio": unfused_bytes / fused_bytes,
+        "flops": flops,
+        "arithmetic_intensity": flops / fused_bytes,
+    }
+
+
+def fused_sweep_roofline(traffic: dict, measured_s: float) -> dict:
+    """Achieved-vs-roofline for one measured fused-sweep kernel wall time.
+
+    Meaningful on TPU (Mosaic); on CPU interpret mode the fraction only
+    documents how far the interpreter is from the HW model.
+    """
+    bw = HW["hbm_bandwidth"]
+    t_mem = traffic["fused_bytes"] / bw
+    achieved = traffic["fused_bytes"] / measured_s if measured_s > 0 else 0.0
+    return {
+        "roofline_t_memory_s": t_mem,
+        "achieved_gbps": achieved / 1e9,
+        "roofline_fraction": achieved / bw,
+    }
+
+
 def model_flops(cfg: ModelConfig, shape_name: str, n_clients: int = 1) -> float:
     """MODEL_FLOPS = 6*N*D (train) / 2*N_active*D (inference) global."""
     seq, global_batch, kind = INPUT_SHAPES[shape_name]

@@ -2,6 +2,7 @@
 from repro.core.depositum import (  # noqa: F401
     DepositumConfig,
     DepositumState,
+    fused_eligibility,
     init,
     step,
     local_then_comm_round,

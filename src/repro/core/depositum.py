@@ -59,6 +59,9 @@ from repro.core.prox import (
 PyTree = Any
 
 
+_FUSED_MODES = ("auto", "require", "off")
+
+
 @dataclasses.dataclass(frozen=True)
 class DepositumConfig:
     alpha: float = 0.05          # prox-descent step size
@@ -70,6 +73,20 @@ class DepositumConfig:
     prox_kwargs: dict = dataclasses.field(default_factory=lambda: {"lam": 1e-4})
     # when True, use a fused Pallas kernel for momentum+prox (TPU path)
     use_fused_kernel: bool = False
+    # explicit fused-kernel policy: "auto" uses the kernel whenever this
+    # step is eligible (and silently falls back otherwise), "require"
+    # raises on the first ineligible step, "off" never fuses.  None keeps
+    # the legacy behaviour of ``use_fused_kernel`` (True -> "auto").
+    fused: str | None = None
+
+    def fused_mode(self) -> str:
+        """Resolved fused policy ("auto" | "require" | "off")."""
+        if self.fused is not None:
+            if self.fused not in _FUSED_MODES:
+                raise ValueError(
+                    f"fused must be one of {_FUSED_MODES}, got {self.fused!r}")
+            return self.fused
+        return "auto" if self.use_fused_kernel else "off"
 
     def hyper(self) -> Hyper:
         """Continuous hyperparameters of this config as a Hyper pytree."""
@@ -87,6 +104,7 @@ class DepositumConfig:
         """
         if self.comm_period < 1:
             raise ValueError("comm_period (T0) must be >= 1")
+        self.fused_mode()  # raises on an unknown fused policy
         fam = get_family(self.prox_name)
         if hyper is None:
             alpha, gamma = self.alpha, self.gamma
@@ -116,6 +134,34 @@ class DepositumConfig:
         prox.check_step(self.alpha)
         self.validate()
         return prox
+
+
+def fused_eligibility(config: "DepositumConfig", state=None,
+                      hyper: Hyper | None = None) -> tuple[bool, str]:
+    """Can the fused (sweep-major) Pallas kernels serve this step?
+
+    Returns ``(ok, reason)`` with ``reason`` naming the first blocker: the
+    kernels cover Polyak momentum over the l1 | mcp | scad prox chain, on
+    floating-point state leaves, with *scalar* per-step hyperparameters —
+    a stacked Hyper must ride the sweep engine's vmap (where the custom
+    batching rule maps it onto grid axis 0), never reach ``step`` raw.
+    """
+    if config.momentum != "polyak":
+        return False, (f"momentum={config.momentum!r} (kernel covers "
+                       "'polyak' only)")
+    if config.prox_name not in ("l1", "mcp", "scad"):
+        return False, (f"prox_name={config.prox_name!r} (kernel covers "
+                       "l1 | mcp | scad)")
+    if state is not None:
+        for leaf in jax.tree_util.tree_leaves((state.x, state.y, state.nu,
+                                               state.g)):
+            if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                return False, (f"non-float state leaf dtype {leaf.dtype} "
+                               "(kernel is float-only)")
+    if hyper is not None and jnp.ndim(hyper.alpha) > 0:
+        return False, ("stacked Hyper passed directly to step (vmap the "
+                       "run over the sweep axis instead)")
+    return True, "eligible"
 
 
 class DepositumState(NamedTuple):
@@ -207,7 +253,9 @@ def step(
     derived from the schedule's sampler (:func:`schedule_round_mask`);
     round loops compute it once and pass it to every local step.
     """
+    is_cohort_mixer = False
     if isinstance(mixer, (MixSchedule, ScheduleMixer)):
+        is_cohort_mixer = getattr(mixer, "schedule", mixer).kind == "cohort"
         r = state.t // config.comm_period
         if active_mask is None:
             active_mask = schedule_round_mask(mixer, r)
@@ -224,26 +272,45 @@ def step(
         hp = config.hyper()
     else:
         hp = hyper
+    if is_comm_step is None:
+        is_comm_step = (state.t + 1) % config.comm_period == 0
     tm = jax.tree_util.tree_map
     # cast scalars to each leaf's dtype so bf16 params stay bf16 (strong f32
     # scalars would otherwise promote the scan carry and change its type)
     c = lambda s, leaf: jnp.asarray(s, leaf.dtype)
 
-    fused_ok = (
-        config.use_fused_kernel
-        and config.momentum == "polyak"
-        and config.prox_name in ("l1", "mcp", "scad")
-    )
-    if fused_ok:
-        # (1)+(2) in one Pallas VMEM pass: nu' = g*nu + (1-g)*y;
-        # x_half = prox_{alpha h}(x - alpha nu')  (kernels/prox)
-        from repro.kernels.prox.ops import fused_update_tree
+    fused_mode = config.fused_mode()
+    if fused_mode == "off":
+        fused_ok = False
+    else:
+        fused_ok, why = fused_eligibility(config, state, hp)
+        if fused_mode == "require" and not fused_ok:
+            raise ValueError(
+                f"fused='require' but the fused kernel cannot serve this "
+                f"step: {why}")
 
-        x_half, nu_next = fused_update_tree(
-            state.x, state.y, state.nu,
-            kind=config.prox_name,
-            lam=hp.lam, theta=hp.theta, alpha=hp.alpha, gamma=hp.gamma,
-        )
+    # The cohort gate rides *inside* the kernels (frozen rows written back
+    # unchanged) whenever that is exactly equivalent to the reference
+    # compute-then-select order: on collective-free steps, and on comm steps
+    # whose mixing already masks frozen contributions (cohort schedules).
+    # A generic mixer with an explicit mask keeps the legacy outer selects,
+    # where active rows may read frozen rows' hypothetical updates.
+    kernel_mask = None
+    if fused_ok and active_mask is not None and (
+            is_comm_step is False or is_cohort_mixer):
+        kernel_mask = active_mask
+
+    if fused_ok:
+        # (1)+(2) in one sweep-major Pallas VMEM pass per leaf:
+        # nu' = g*nu + (1-g)*y; x_half = prox_{alpha h}(x - alpha nu').
+        # Under the sweep engine's vmap the custom batching rule maps the
+        # stacked-config axis onto Pallas grid axis 0 (kernels/prox/ops).
+        from repro.kernels.prox.ops import fused_local_update, hyper_param_vec
+
+        hp_vec = hyper_param_vec(hp)
+        x_half, nu_next = fused_local_update(
+            state.x, state.y, state.nu, hp_vec, kernel_mask,
+            kind=config.prox_name)
         mu_next = state.mu
     else:
         # (1) momentum from the tracking variable
@@ -258,9 +325,6 @@ def step(
             hp.alpha, lam=hp.lam, theta=hp.theta,
         )
 
-    if is_comm_step is None:
-        is_comm_step = (state.t + 1) % config.comm_period == 0
-
     if isinstance(is_comm_step, bool):
         x_next = mixer(x_half) if is_comm_step else x_half
     else:
@@ -274,10 +338,16 @@ def step(
     g_next, aux = grad_fn(x_next, batch)
 
     # (4) gradient tracking with step size beta
-    y_half = tm(
-        lambda y, gn, go: y + c(hp.beta, y) * (gn - go),
-        state.y, g_next, state.g,
-    )
+    if fused_ok:
+        from repro.kernels.prox.ops import fused_tracking
+
+        y_half, g_next = fused_tracking(
+            state.y, g_next, state.g, hp_vec, kernel_mask)
+    else:
+        y_half = tm(
+            lambda y, gn, go: y + c(hp.beta, y) * (gn - go),
+            state.y, g_next, state.g,
+        )
     if isinstance(is_comm_step, bool):
         y_next = mixer(y_half) if is_comm_step else y_half
     else:
@@ -295,11 +365,19 @@ def step(
                     am.reshape(am.shape + (1,) * (nw.ndim - 1)) > 0, nw, od),
                 new, old)
 
-        x_next = keep(x_next, state.x)
-        y_next = keep(y_next, state.y)
-        nu_next = keep(nu_next, state.nu)
-        mu_next = keep(mu_next, state.mu)
-        g_next = keep(g_next, state.g)
+        if kernel_mask is not None:
+            # nu / g / the pre-mix halves are already frozen in-kernel; only
+            # the mixed variables still need the bit-exact post-mix select
+            # (cohort mixing preserves frozen rows up to -0.0 + 0.0)
+            if is_comm_step is not False:
+                x_next = keep(x_next, state.x)
+                y_next = keep(y_next, state.y)
+        else:
+            x_next = keep(x_next, state.x)
+            y_next = keep(y_next, state.y)
+            nu_next = keep(nu_next, state.nu)
+            mu_next = keep(mu_next, state.mu)
+            g_next = keep(g_next, state.g)
 
     new_state = DepositumState(
         x=x_next, y=y_next, nu=nu_next, mu=mu_next, g=g_next, t=state.t + 1

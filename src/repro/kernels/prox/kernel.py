@@ -5,20 +5,37 @@ streamed from HBM.  On TPU the fused kernel turns ~7 HBM sweeps of the
 unfused update (momentum axpy, shift, prox select chain) into 1 read of
 {x, y, nu} + 1 write of {x', nu'}.
 
-Hyperparameters (lam, theta, alpha, gamma) are **runtime scalars**: they are
-packed into a tiny SMEM params block rather than baked in as compile-time
-constants, so one compiled kernel serves every point of a hyperparameter
-sweep (and composes with ``jax.vmap`` over stacked configs).  Only the prox
-``kind`` selects code and stays static.
+Hyperparameters (lam, theta, alpha, gamma, beta) are **runtime scalars**:
+they are packed into a tiny SMEM params block rather than baked in as
+compile-time constants, so one compiled kernel serves every point of a
+hyperparameter sweep.  Only the prox ``kind`` selects code and stays static.
 
-Validated on CPU with ``interpret=True`` against ``ref.py``.
+Two kernel families live here:
+
+* the classic per-config kernels (``prox_pallas`` / ``fused_update_pallas``)
+  — one config, clients folded into the row axis, composing with ``vmap``;
+* the **sweep-major** kernels (``fused_update_sweep_pallas`` /
+  ``fused_tracking_sweep_pallas``) — the Pallas grid is
+  ``(n_configs, n_clients, n_param_tiles)``, the SMEM params block is an
+  ``(n_configs, 5)`` table indexed by ``pl.program_id(0)``, and an optional
+  ``(n_configs, n_clients)`` SMEM cohort gate freezes masked rows *inside*
+  the kernel, so a whole stacked-Hyper grid runs as one kernel launch with
+  no outer ``vmap`` and no per-config retrace.
+
+Validation split: on CPU everything runs with ``interpret=True`` and is
+checked against ``ref.py`` (bit-level semantics, no Mosaic lowering); on a
+real TPU the same calls lower through Mosaic and the SMEM-table indexing /
+timing claims become meaningful (``benchmarks/kernel_bench.py``).
 """
 from __future__ import annotations
 
+import collections
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 try:  # SMEM lives in the TPU extension; fall back gracefully off-TPU
@@ -31,18 +48,38 @@ except Exception:  # pragma: no cover - pallas without TPU support
 # (sublane, lane)-aligned tile; 8x128 is the fp32 VREG tile, use a multiple
 BLOCK_ROWS = 256
 BLOCK_COLS = 256
+LANE = 128      # TPU lane width: last block dim must be a multiple
+SUBLANE = 8     # fp32 sublane tile: second-to-last block dim multiple
+
+# trace-time call counters, keyed by kernel family.  Incremented inside the
+# jitted wrappers, so a count rises only when XLA actually (re)traces —
+# the regression tests pin "zero retraces across configs" with these.
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def reset_trace_counts() -> None:
+    TRACE_COUNTS.clear()
 
 
 def _should_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+@functools.lru_cache(maxsize=None)
+def _pad_layout(n: int, rows: int, cols: int) -> tuple[int, int]:
+    """(padded length, padded row count) of an n-element flat leaf tiled to
+    (rows, cols) blocks.  Cached so repeated calls (one per leaf per traced
+    round) do no host-side shape arithmetic."""
+    tile = rows * cols
+    padded = ((n + tile - 1) // tile) * tile
+    return padded, padded // cols
+
+
 def _pad_to_2d(x, rows: int, cols: int):
     """Flatten to 1-D, pad to a multiple of rows*cols, reshape (n_tiles*rows, cols)."""
     flat = x.reshape(-1)
     n = flat.shape[0]
-    tile = rows * cols
-    padded = ((n + tile - 1) // tile) * tile
+    padded, _ = _pad_layout(n, rows, cols)
     flat = jnp.pad(flat, (0, padded - n))
     return flat.reshape(-1, cols), n
 
@@ -96,6 +133,7 @@ def prox_pallas(x, *, kind: str = "l1", lam=1e-4, theta=4.0, alpha=0.1):
     ``lam``/``theta``/``alpha`` may be Python floats or traced jnp scalars;
     either way they ride in SMEM and do not trigger recompilation.
     """
+    TRACE_COUNTS["prox"] += 1
     x2, n = _pad_to_2d(x, BLOCK_ROWS, BLOCK_COLS)
     rows = x2.shape[0]
     grid = (rows // BLOCK_ROWS,)
@@ -135,6 +173,7 @@ def fused_update_pallas(x, y, nu, *, kind: str = "l1", lam=1e-4,
 
     Hyperparameters are runtime SMEM scalars — sweep-safe, recompile-free.
     """
+    TRACE_COUNTS["fused_update"] += 1
     assert x.shape == y.shape == nu.shape
     x2, n = _pad_to_2d(x, BLOCK_ROWS, BLOCK_COLS)
     y2, _ = _pad_to_2d(y, BLOCK_ROWS, BLOCK_COLS)
@@ -155,3 +194,195 @@ def fused_update_pallas(x, y, nu, *, kind: str = "l1", lam=1e-4,
     )(_params_block(lam, theta, alpha, gamma), x2, y2, nu2)
     unpad = lambda o, ref: o.reshape(-1)[:n].reshape(ref.shape)
     return unpad(xo, x), unpad(nuo, nu)
+
+
+# ---------------------------------------------------------------------------
+# Sweep-major fused kernels: the (config, client) axes live IN the grid
+# ---------------------------------------------------------------------------
+#
+# Layout per leaf: (S, C, *param_shape) -> (S, C, rows, LANE), where the
+# per-client parameter vector (d elements) is padded to rows*LANE with rows a
+# multiple of SUBLANE.  Grid = (S, C, rows // block_rows); every grid step
+# reads a (1, 1, block_rows, LANE) VMEM block of each operand.  The SMEM
+# params table is (S, 5) [lam, theta, alpha, gamma, beta] indexed by
+# pl.program_id(0); the optional cohort gate is an (S, C) SMEM table indexed
+# by (program_id(0), program_id(1)) — masked (config, client) rows are
+# written back unchanged inside the kernel, no post-hoc HBM sweep.
+
+# params-table column order (shared with ops.py / depositum.step)
+PARAM_COLS = ("lam", "theta", "alpha", "gamma", "beta")
+
+
+class SweepLayout(NamedTuple):
+    """Static tile layout of one leaf's per-client parameter vector."""
+
+    size: int        # d: elements per (config, client)
+    rows: int        # padded row count (multiple of block_rows)
+    block_rows: int  # rows per grid step along the param axis
+
+    @property
+    def padded(self) -> int:
+        return self.rows * LANE
+
+    @property
+    def n_param_tiles(self) -> int:
+        return self.rows // self.block_rows
+
+
+@functools.lru_cache(maxsize=None)
+def sweep_layout(size: int) -> SweepLayout:
+    """Tile layout for a d-element per-client vector, computed once per
+    distinct d (the per-tree layout spec is just this over leaf sizes — the
+    fused path does no host-side shape arithmetic per round)."""
+    rows = max((size + LANE - 1) // LANE, 1)
+    rows = ((rows + SUBLANE - 1) // SUBLANE) * SUBLANE
+    for br in (256, 128, 64, 32, 16, 8):
+        if rows % br == 0:
+            break
+    return SweepLayout(size=size, rows=rows, block_rows=br)
+
+
+def sweep_params_table(lam, theta, alpha, gamma, beta=0.0) -> jnp.ndarray:
+    """(S, 5) fp32 params table from scalars or stacked (S,) leaves."""
+    cols = [jnp.asarray(v, jnp.float32) for v in (lam, theta, alpha, gamma,
+                                                  beta)]
+    S = max((int(c.shape[0]) for c in cols if c.ndim == 1), default=1)
+    cols = [jnp.broadcast_to(c.reshape(-1), (S,)) for c in cols]
+    return jnp.stack(cols, axis=-1)
+
+
+def _pad_sweep(leaf, lay: SweepLayout):
+    """(S, C, *p) -> (S, C, rows, LANE) zero-padded tail."""
+    S, C = leaf.shape[:2]
+    flat = leaf.reshape(S, C, -1)
+    flat = jnp.pad(flat, ((0, 0), (0, 0), (0, lay.padded - lay.size)))
+    return flat.reshape(S, C, lay.rows, LANE)
+
+
+def _unpad_sweep(out, lay: SweepLayout, ref):
+    S, C = ref.shape[:2]
+    return out.reshape(S, C, -1)[:, :, : lay.size].reshape(ref.shape)
+
+
+def _fused_sweep_kernel(p_ref, *refs, kind, gated):
+    """Momentum + tracking shift + prox, one VMEM pass per (s, c, tile):
+
+        nu' = gamma nu + (1 - gamma) y
+        x'  = prox_{alpha h}(x - alpha nu')        (kind in l1 | mcp | scad)
+
+    with the config's hyperparameters read from the SMEM table row
+    ``program_id(0)`` and — when ``gated`` — frozen (config, client) rows
+    written back unchanged via the SMEM cohort gate."""
+    s = pl.program_id(0)
+    if gated:
+        m_ref, x_ref, y_ref, nu_ref, xo_ref, nuo_ref = refs
+    else:
+        x_ref, y_ref, nu_ref, xo_ref, nuo_ref = refs
+    lam, theta = p_ref[s, 0], p_ref[s, 1]
+    alpha, gamma = p_ref[s, 2], p_ref[s, 3]
+    x = x_ref[0, 0].astype(jnp.float32)
+    y = y_ref[0, 0].astype(jnp.float32)
+    nu = nu_ref[0, 0].astype(jnp.float32)
+    nu_next = gamma * nu + (1.0 - gamma) * y
+    x_next = _prox_block(x - alpha * nu_next, kind, lam, theta, alpha)
+    if gated:
+        live = m_ref[s, pl.program_id(1)] > 0
+        x_next = jnp.where(live, x_next, x)
+        nu_next = jnp.where(live, nu_next, nu)
+    xo_ref[0, 0] = x_next.astype(xo_ref.dtype)
+    nuo_ref[0, 0] = nu_next.astype(nuo_ref.dtype)
+
+
+def _tracking_sweep_kernel(p_ref, *refs, gated):
+    """Gradient-tracking axpy, one VMEM pass per (s, c, tile):
+
+        y' = y + beta (g_new - g_old)
+
+    When ``gated`` the kernel also emits the kept gradient
+    ``g' = where(live, g_new, g_old)`` so the round program's freeze of
+    frozen rows costs no extra sweep."""
+    s = pl.program_id(0)
+    if gated:
+        m_ref, y_ref, gn_ref, go_ref, yo_ref, gk_ref = refs
+    else:
+        y_ref, gn_ref, go_ref, yo_ref = refs
+    beta = p_ref[s, 4]
+    y = y_ref[0, 0].astype(jnp.float32)
+    gn = gn_ref[0, 0].astype(jnp.float32)
+    go = go_ref[0, 0].astype(jnp.float32)
+    y_next = y + beta * (gn - go)
+    if gated:
+        live = m_ref[s, pl.program_id(1)] > 0
+        y_next = jnp.where(live, y_next, y)
+        gk_ref[0, 0] = jnp.where(live, gn, go).astype(gk_ref.dtype)
+    yo_ref[0, 0] = y_next.astype(yo_ref.dtype)
+
+
+def _sweep_grid_call(kernel, out_dtypes, x, *operands, params, mask):
+    """Shared pallas_call plumbing for the sweep-major kernels.
+
+    ``x`` and ``operands`` are (S, C, *p) leaves (same shape); ``params`` is
+    the (S, 5) table, ``mask`` an optional (S, C) gate.  Returns the padded
+    (S, C, rows, LANE) outputs (one per entry of ``out_dtypes``) plus the
+    layout for unpadding.
+    """
+    S, C = x.shape[:2]
+    d = int(np.prod(x.shape[2:], dtype=np.int64)) if x.ndim > 2 else 1
+    lay = sweep_layout(d)
+    padded = [_pad_sweep(a, lay) for a in (x,) + operands]
+    bs = pl.BlockSpec((1, 1, lay.block_rows, LANE),
+                      lambda s, c, p: (s, c, p, 0))
+    smem = [_scalar_spec()]
+    ins = [jnp.asarray(params, jnp.float32)]
+    if mask is not None:
+        smem.append(_scalar_spec())
+        ins.append(jnp.asarray(mask, jnp.float32))
+    outs = pl.pallas_call(
+        kernel,
+        grid=(S, C, lay.n_param_tiles),
+        in_specs=smem + [bs] * len(padded),
+        out_specs=[bs] * len(out_dtypes),
+        out_shape=[jax.ShapeDtypeStruct(padded[0].shape, dt)
+                   for dt in out_dtypes],
+        interpret=_should_interpret(),
+    )(*ins, *padded)
+    return outs, lay
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def fused_update_sweep_pallas(x, y, nu, params, mask=None, *,
+                              kind: str = "l1"):
+    """Sweep-major fused momentum+prox update.  Returns (x', nu').
+
+    ``x``/``y``/``nu``: (S, C, *param_shape) — S stacked configs, C clients;
+    ``params``: (S, 5) runtime table (:func:`sweep_params_table`), ``mask``:
+    optional (S, C) cohort gate (0 rows come back bit-identical).  One
+    compiled kernel serves every config of the grid: the table rides in
+    SMEM, so new hyperparameter values never retrace.
+    """
+    TRACE_COUNTS["fused_sweep"] += 1
+    assert x.shape == y.shape == nu.shape and x.ndim >= 2
+    kernel = functools.partial(_fused_sweep_kernel, kind=kind,
+                               gated=mask is not None)
+    (xo, nuo), lay = _sweep_grid_call(kernel, (x.dtype, nu.dtype), x, y, nu,
+                                      params=params, mask=mask)
+    return _unpad_sweep(xo, lay, x), _unpad_sweep(nuo, lay, nu)
+
+
+@jax.jit
+def fused_tracking_sweep_pallas(y, g_new, g_old, params, mask=None):
+    """Sweep-major tracking axpy.  Returns (y', g_kept).
+
+    Same layout contract as :func:`fused_update_sweep_pallas`; ``beta``
+    comes from column 4 of the params table.  Without a mask ``g_kept`` is
+    ``g_new`` itself (no copy)."""
+    TRACE_COUNTS["tracking_sweep"] += 1
+    assert y.shape == g_new.shape == g_old.shape and y.ndim >= 2
+    gated = mask is not None
+    kernel = functools.partial(_tracking_sweep_kernel, gated=gated)
+    dts = (y.dtype, g_new.dtype) if gated else (y.dtype,)
+    outs, lay = _sweep_grid_call(kernel, dts, y, g_new, g_old,
+                                 params=params, mask=mask)
+    y_next = _unpad_sweep(outs[0], lay, y)
+    g_kept = _unpad_sweep(outs[1], lay, g_new) if gated else g_new
+    return y_next, g_kept

@@ -22,6 +22,16 @@ fedopt baselines can all share it:
 name.  All backends expose ``mixer_for(plan) -> Mixer``; plans with traced
 leaves must be threaded as operands (the sweep engine does this), never
 baked into a jit closure, or the one-program-per-grid guarantee is lost.
+
+Fused local compute: the *mixing* strategy above is orthogonal to the
+local-update kernel.  With ``config.use_fused_kernel`` the round program's
+update is a sweep-major Pallas kernel (``repro.kernels.prox``) whose grid
+axis 0 is the stacked-config axis; on the stacked-vmap backend the sweep
+engine's vmap maps straight onto that grid axis (one launch per leaf for
+the whole grid), while on the shard_map backend the local update runs on
+the sharded client rows — per-shard client tiles — and only mixing enters
+``shard_map``.  ``supports_fused_sweep`` advertises this; it is True for
+every in-tree backend and exists so out-of-tree placements can opt out.
 """
 from __future__ import annotations
 
@@ -60,6 +70,11 @@ class ExecutionBackend(Protocol):
     """The contract every backend satisfies."""
 
     name: str
+    #: Whether ``depositum.step``'s sweep-major fused kernel may run on this
+    #: placement (all in-tree backends: yes — the local update is outside
+    #: the mixing collective on every one of them).  ``training.sweep``
+    #: consults this before honouring ``fused="require"``.
+    supports_fused_sweep: bool
 
     def mixer_for(self, plan: MixPlan) -> Mixer:  # pragma: no cover
         ...
@@ -75,6 +90,7 @@ class StackedVmapBackend:
     """
 
     name: str = dataclasses.field(default="stacked-vmap", init=False)
+    supports_fused_sweep: bool = dataclasses.field(default=True, init=False)
 
     def mixer_for(self, plan) -> Mixer:
         if isinstance(plan, MixSchedule):
@@ -97,6 +113,9 @@ class ShardMapBackend:
     axis_name: str = "clients"
     n_clients: int = 0
     name: str = dataclasses.field(default="shard_map", init=False)
+    #: The fused local update runs on the sharded client rows *outside*
+    #: the shard_map'd mixing — per-shard client tiles, same kernel.
+    supports_fused_sweep: bool = dataclasses.field(default=True, init=False)
 
     def _axis_size(self) -> int:
         if isinstance(self.axis_name, tuple):
@@ -177,6 +196,10 @@ class SweepBackend:
     inner: ExecutionBackend = dataclasses.field(
         default_factory=StackedVmapBackend)
     name: str = dataclasses.field(default="sweep", init=False)
+
+    @property
+    def supports_fused_sweep(self) -> bool:
+        return getattr(self.inner, "supports_fused_sweep", True)
 
     def mixer_for(self, plan: MixPlan) -> Mixer:
         return self.inner.mixer_for(plan)

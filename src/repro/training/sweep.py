@@ -36,6 +36,16 @@ Static structure (momentum kind, prox family, T0, mix *kind*,
 use_fused_kernel) lives in the single ``DepositumConfig`` (plus the plan's
 static fields) shared by the whole sweep; grids that vary static fields are
 grouped by the caller (see ``benchmarks/common.py:run_depositum_grid``).
+
+With ``use_fused_kernel`` (or ``fused="auto"|"require"``) the local update
+does NOT run as S per-config kernels under the vmap: the fused entry points
+are ``jax.custom_batching.custom_vmap`` functions whose batching rule maps
+the stacked-Hyper sweep axis onto **Pallas grid axis 0** of the sweep-major
+kernels (``repro.kernels.prox``) — one kernel launch per leaf covers the
+whole (config, client) grid, hyperparameters ride in an (S, 5) SMEM table,
+and cohort masks gate frozen rows in-kernel.  ``fused="require"`` is
+checked host-side here at the sweep boundary (momentum/prox structure,
+float params) before anything is traced.
 """
 from __future__ import annotations
 
@@ -48,6 +58,7 @@ from repro.core import (
     DepositumConfig,
     DepositumState,
     Hyper,
+    fused_eligibility,
     init as dep_init,
     local_then_comm_round,
     n_sweep,
@@ -157,6 +168,31 @@ def _validate_operand(plan, n_clients: int) -> None:
         validate_plan(plan, n_clients)
 
 
+def _check_fused_boundary(config: DepositumConfig, params0=None,
+                          backend=None) -> None:
+    """Host-side ``fused="require"`` gate at the sweep boundary.
+
+    The per-step eligibility check inside ``depositum.step`` would also
+    raise, but only mid-trace; failing here keeps the error at the API
+    surface with the structural reason (momentum kind, prox family,
+    non-float params, a backend opting out) before any compilation starts.
+    """
+    if config.fused_mode() != "require":
+        return
+    ok, why = fused_eligibility(config)
+    if ok and backend is not None and not getattr(
+            backend, "supports_fused_sweep", True):
+        ok, why = False, f"backend {backend.name!r} opts out of fused sweep"
+    if ok and params0 is not None:
+        for leaf in jax.tree_util.tree_leaves(params0):
+            dt = jnp.asarray(leaf).dtype
+            if not jnp.issubdtype(dt, jnp.floating):
+                ok, why = False, f"non-float params leaf dtype {dt}"
+                break
+    if not ok:
+        raise ValueError(f"fused='require' cannot be honoured: {why}")
+
+
 def _metrics_caller(metrics_fn):
     """Normalise a metrics callback to ``f(state, hyper, plan) -> dict``.
 
@@ -242,6 +278,7 @@ def make_sweep_round(
     batches shared across the sweep.
     """
     backend = backend or StackedVmapBackend()
+    _check_fused_boundary(config, backend=backend)
     legacy, plan0, _, _, _, plan_axes = _normalise_operands(
         mixer, Hyper.create())
     mixer_factory = ((lambda p: legacy) if legacy is not None
@@ -302,6 +339,7 @@ def sweep_run(
     """
     backend = backend or StackedVmapBackend()
     config.validate(hypers)  # host-side range checks on the concrete grid
+    _check_fused_boundary(config, params0, backend)
     n_extra = max(_mapped_len(params0, params_axis),
                   _mapped_len(batches, batch_axis))
     legacy, plan, hypers, S, hyper_axes, plan_axes = _normalise_operands(
@@ -340,6 +378,7 @@ def sweep_run_sequential(
     """
     backend = backend or StackedVmapBackend()
     config.validate(hypers)
+    _check_fused_boundary(config, params0, backend)
     n_extra = max(_mapped_len(params0, params_axis),
                   _mapped_len(batches, batch_axis))
     legacy, plan, hypers, S, hyper_axes, plan_axes = _normalise_operands(

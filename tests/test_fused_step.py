@@ -47,6 +47,41 @@ def test_fused_step_matches_reference(prox, kwargs):
             np.asarray(getattr(out[True], name)), atol=1e-5, rtol=1e-5)
 
 
+def test_fused_step_masked_generic_mixer_matches_reference():
+    """An explicit active_mask with a *generic* dense mixer must keep the
+    reference compute-then-select order (active rows read frozen rows'
+    hypothetical halves through W): the fused path withholds the in-kernel
+    gate there and must still match the unfused path exactly."""
+    n, d = 6, 129
+    key = jax.random.PRNGKey(5)
+    A = jax.random.normal(key, (n, d))
+
+    def grad_fn(x, batch):
+        return A * x, {}
+
+    mixer = make_dense_mixer(mixing_matrix("ring", n))
+    mask = jnp.asarray([1, 0, 1, 1, 0, 1], jnp.float32)
+    out = {}
+    for fused in (False, True):
+        cfg = DepositumConfig(alpha=0.05, gamma=0.8, momentum="polyak",
+                              comm_period=1, prox_name="l1",
+                              prox_kwargs={"lam": 1e-3},
+                              use_fused_kernel=fused)
+        st = init(jnp.ones(d), n)
+        for t in range(4):
+            st, _ = step(st, None, grad_fn, cfg, mixer,
+                         is_comm_step=(t % 2 == 1), active_mask=mask)
+        out[fused] = st
+    for name in ("x", "nu", "y", "g"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(out[False], name)),
+            np.asarray(getattr(out[True], name)), atol=1e-5, rtol=1e-5,
+            err_msg=f"leaf {name}")
+    # frozen rows never moved off their init values on either path
+    np.testing.assert_array_equal(np.asarray(out[True].nu)[jnp.asarray(
+        [1, 4])], 0.0)
+
+
 def test_fused_falls_back_for_nesterov():
     """Nesterov needs mu; the fused kernel only covers Polyak — the step
     must silently use the reference path (and still be correct)."""

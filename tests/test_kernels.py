@@ -7,7 +7,12 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.prox.kernel import fused_update_pallas, prox_pallas
+from repro.kernels.prox.kernel import (
+    fused_update_pallas,
+    fused_update_sweep_pallas,
+    prox_pallas,
+    sweep_params_table,
+)
 from repro.kernels.prox.ops import fused_update_tree, prox_tree
 from repro.kernels.prox.ref import (
     fused_update_ref,
@@ -76,6 +81,31 @@ def test_fused_update_hyperparameter_sweep(lam, alpha, gamma):
                                prox_kind="scad", theta=4.0)
     np.testing.assert_allclose(np.asarray(xo), np.asarray(xr), atol=1e-5,
                                rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sweep_kernel_dtypes(dtype):
+    """The sweep-major kernel computes in f32 and preserves leaf dtype."""
+    S, C, d = 2, 3, 200
+    key = jax.random.PRNGKey(9)
+    mk = lambda i: (jax.random.normal(jax.random.fold_in(key, i),
+                                      (S, C, d)) * 0.1).astype(dtype)
+    x, y, nu = mk(0), mk(1), mk(2)
+    params = sweep_params_table(lam=1e-3, theta=4.0,
+                                alpha=jnp.asarray([0.05, 0.1]), gamma=0.5)
+    xo, nuo = fused_update_sweep_pallas(x, y, nu, params, kind="l1")
+    assert xo.dtype == dtype and nuo.dtype == dtype
+    for s, alpha in enumerate((0.05, 0.1)):
+        xr, nur = fused_update_ref(x[s].astype(jnp.float32),
+                                   y[s].astype(jnp.float32),
+                                   nu[s].astype(jnp.float32),
+                                   1e-3, alpha, 0.5)
+        np.testing.assert_allclose(np.asarray(xo[s], np.float32),
+                                   np.asarray(xr.astype(dtype), np.float32),
+                                   atol=_tol(dtype), rtol=_tol(dtype))
+        np.testing.assert_allclose(np.asarray(nuo[s], np.float32),
+                                   np.asarray(nur.astype(dtype), np.float32),
+                                   atol=_tol(dtype), rtol=_tol(dtype))
 
 
 def test_prox_tree_and_fused_tree():
