@@ -1,0 +1,222 @@
+"""Accuracy-vs-bytes frontier (beyond-paper): compression as a sweep axis.
+
+The communication lever the paper leaves on the table: DEPOSITUM cuts
+*round frequency* with T0 local steps; CHOCO-style compressed gossip cuts
+*bytes per round*.  This figure sweeps the compressor itself — a ``none``
+baseline, a top-k rate grid, and a QSGD bits grid — as ONE compiled
+program: :func:`~repro.core.compression.stack_specs` normalises the
+heterogeneous kinds to the ``mixed`` form (traced ``kind_id`` dispatched
+through ``lax.switch``), so every point of the accuracy-vs-bytes frontier
+(cf. arXiv 2107.12048) rides the same jitted scan with rate/bits/ef_step
+as traced operands.
+
+``sequential=True`` is the honest baseline: one fresh-jit program per
+compressor at its native (unmixed) kind.  ``benchmarks/run.py`` records
+the sweep-vs-sequential wall ratio and the per-point bytes/round (from
+``repro.analysis.comm`` — value/index pairs for sparse kinds, int8 words
++ row norm for qsgd, k collectives for chebyshev) in ``BENCH_sweep.json``
+under ``comm_frontier``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+# allow `python benchmarks/fig_comm_frontier.py` from anywhere (like run.py)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    CompressionSpec,
+    DepositumConfig,
+    MixPlan,
+    as_schedule,
+    stack_hypers,
+    stack_schedules,
+    validate_schedule,
+)
+from repro.analysis.comm import (
+    round_wire_bytes,
+    spec_bits_per_coord,
+    sweep_round_bytes,
+)
+from repro.training.sweep import sweep_run
+
+N, D, M, T0 = 8, 64, 16, 5
+TOPK_RATES = [0.05, 0.1, 0.25, 0.5]
+QSGD_BITS = [2, 4, 8]
+EF_STEP = 0.3
+
+
+def use_quick_grid():
+    """CI grid: fewer rates/bits, same mixed-kind one-program path."""
+    global TOPK_RATES, QSGD_BITS
+    TOPK_RATES = [0.1, 0.5]
+    QSGD_BITS = [4]
+
+
+def _data():
+    key = jax.random.PRNGKey(7)
+    A = jax.random.normal(key, (N, M, D))
+    w_true = jax.random.normal(jax.random.fold_in(key, 1), (D,))
+    b = jnp.einsum("nmd,d->nm", A, w_true)
+    return A, b
+
+
+def _grad_fn(A, b):
+    def grad_fn(w_stacked, batch):
+        r = jnp.einsum("nmd,nd->nm", A, w_stacked) - b
+        return jnp.einsum("nmd,nm->nd", A, r) / M, {}
+
+    return grad_fn
+
+
+def _metrics_fn_for(A, b):
+    def metrics_fn(state, hyper, operand):
+        xbar = jnp.mean(state.x, axis=0)
+        r = jnp.einsum("nmd,d->nm", A, xbar) - b
+        return {
+            "loss": jnp.mean(r ** 2),
+            "consensus_x": jnp.mean((state.x - xbar[None]) ** 2),
+        }
+
+    return metrics_fn
+
+
+def grid_points():
+    """(name, kind, rate/bits label, native single-kind schedule)."""
+    plan = MixPlan.from_topology("ring", N)
+    base = as_schedule(plan)
+    pts = [("dense", "none", 1.0,
+            base.with_compression(CompressionSpec.none()))]
+    for r in TOPK_RATES:
+        pts.append((f"topk_{r}", "topk", r, base.with_compression(
+            CompressionSpec.topk(r, ef_step=EF_STEP))))
+    for bbits in QSGD_BITS:
+        pts.append((f"qsgd_{bbits}b", "qsgd", bbits, base.with_compression(
+            CompressionSpec.qsgd(bbits, ef_step=EF_STEP))))
+    return pts
+
+
+def run(rounds: int = 30, sequential: bool = False):
+    dep = DepositumConfig(alpha=0.05, beta=0.5, gamma=0.5, comm_period=T0,
+                          prox_name="l1", prox_kwargs={"lam": 1e-5})
+    A, b = _data()
+    params0 = jnp.zeros(D)
+    batches = jnp.zeros((rounds, T0, 1))
+    pts = grid_points()
+    hyper = dep.hyper()
+    grad_fn = _grad_fn(A, b)
+    metrics_fn = _metrics_fn_for(A, b)
+
+    t0 = time.perf_counter()
+    if sequential:
+        # honest baseline: one fresh-jit program per compressor, at its
+        # native (single-kind, statically dispatched) form
+        outs_pts = []
+        for _name, _kind, _lvl, sched in pts:
+            _f, o = sweep_run(params0, grad_fn, dep, sched, hyper,
+                              batches, n_clients=N, metrics_fn=metrics_fn)
+            outs_pts.append(o)
+        outs = jax.tree_util.tree_map(
+            lambda *vs: np.stack([np.asarray(v).reshape(-1) for v in vs]),
+            *outs_pts)
+    else:
+        # one traced operand for the whole frontier: heterogeneous kinds
+        # normalise to the mixed (lax.switch) form inside stack_schedules
+        grid = stack_schedules([sched for _, _, _, sched in pts])
+        validate_schedule(grid, N)
+        hypers = stack_hypers([hyper] * len(pts))
+        _finals, outs = sweep_run(params0, grad_fn, dep, grid, hypers,
+                                  batches, n_clients=N,
+                                  metrics_fn=metrics_fn)
+        outs = jax.tree_util.tree_map(np.asarray, outs)
+    wall = time.perf_counter() - t0
+
+    # bytes accounting from the native (unmixed) schedules — and cross-check
+    # below (in check()) that the stacked mixed operand accounts identically
+    rows = []
+    for s, (name, kind, lvl, sched) in enumerate(pts):
+        bytes_rd = float(round_wire_bytes(sched, d=D, n=N))
+        curves = {
+            "round": list(range(1, rounds + 1)),
+            "loss": [float(v) for v in outs["loss"][s]],
+            "consensus_x": [float(v) for v in outs["consensus_x"][s]],
+            "wall_s": wall / len(pts),
+            "iters": rounds * T0,
+            "sweep_group_id": None if sequential else 0,
+            "sweep_group_size": len(pts),
+            "sweep_group_wall_s": wall,
+        }
+        rows.append({
+            "name": name, "kind": kind, "level": lvl,
+            "bytes_per_round": bytes_rd,
+            "bits_per_coord": float(
+                spec_bits_per_coord(sched.compress, D)),
+            "total_mb": bytes_rd * rounds / 1e6,
+            "final_loss": curves["loss"][-1],
+            "first_loss": curves["loss"][0],
+            "final_consensus_x": curves["consensus_x"][-1],
+            "wall_s": curves["wall_s"],
+            "sweep_group_id": curves["sweep_group_id"],
+            "sweep_group_wall_s": wall,
+            "curves": curves,
+        })
+    return rows
+
+
+def check(rows) -> dict:
+    dense = next(r for r in rows if r["kind"] == "none")
+    topk = sorted((r for r in rows if r["kind"] == "topk"),
+                  key=lambda r: r["level"])
+    qsgd = [r for r in rows if r["kind"] == "qsgd"]
+
+    # the stacked mixed operand must account byte-identically to the
+    # native single-kind schedules the rows were priced from
+    pts = grid_points()
+    grid = stack_schedules([sched for _, _, _, sched in pts])
+    stacked = sweep_round_bytes(grid, d=D, n=N)
+    native = np.asarray([r["bytes_per_round"] for r in rows])
+    return {
+        # one compiled program for every compressor kind and rate
+        "single_program":
+            len({r["sweep_group_id"] for r in rows}) == 1
+            if rows[0]["sweep_group_id"] is not None else False,
+        "kinds_swept": len({r["kind"] for r in rows}),
+        "compressed_points": len(topk) + len(qsgd),
+        "stacked_accounting_matches_native":
+            bool(np.max(np.abs(stacked - native)) < 1e-6 * max(native)),
+        # frontier x-axis sanity: top-k bytes grow with rate and never
+        # exceed dense; qsgd (int8 + norm) undercuts dense f32 rows
+        "topk_bytes_monotone":
+            all(a["bytes_per_round"] < b["bytes_per_round"]
+                for a, b in zip(topk, topk[1:])),
+        "topk_bytes_at_most_dense":
+            all(r["bytes_per_round"] <= dense["bytes_per_round"]
+                for r in topk),
+        "qsgd_bytes_below_dense":
+            all(r["bytes_per_round"] < dense["bytes_per_round"]
+                for r in qsgd),
+        # frontier y-axis sanity: everything converges (error feedback
+        # keeps even 5% top-k descending), dense converges fast
+        "all_points_converge":
+            all(r["final_loss"] < r["first_loss"] for r in rows),
+        "dense_converges_fast":
+            dense["final_loss"] < 0.2 * dense["first_loss"],
+        "grid_points": len(rows),
+    }
+
+
+if __name__ == "__main__":
+    use_quick_grid()
+    rows = run(rounds=10)
+    for r in rows:
+        print({k: v for k, v in r.items() if k != "curves"})
+    print(check(rows))

@@ -6,6 +6,10 @@ Also accepts two BENCH_sweep.json snapshots: when both carry a
 ``kernel_fused_sweep`` section the kernel timings are diffed instead —
 blocked per-iteration wall AND dispatch-only times side by side (the two
 numbers ``kernel_bench._time`` now reports; blocked is the honest one).
+When both carry a ``comm_frontier`` section the compression frontier is
+diffed too: sweep/sequential walls plus bytes-on-wire and final loss per
+compressor point (so a payload-accounting change shows up as a bytes
+diff, a numerics change as a loss diff).
 """
 from __future__ import annotations
 
@@ -41,11 +45,42 @@ def diff_kernel_section(a: dict, b: dict, lines: list) -> str:
     return "\n".join(lines)
 
 
+def diff_comm_section(a: dict, b: dict, lines: list) -> str:
+    """Diff ``comm_frontier`` sections of two BENCH_sweep snapshots."""
+    ca, cb = a["comm_frontier"], b["comm_frontier"]
+    for key in ("sweep_wall_s", "sequential_wall_s", "speedup"):
+        va, vb = ca.get(key, 0), cb.get(key, 0)
+        ratio = (va / vb) if vb else float("inf")
+        lines.append(f"{key:22s} {fmt(va):>12s} -> {fmt(vb):>12s}"
+                     f"   ({ratio:.2f}x)")
+    ba, bb = ca.get("bytes_per_round", {}), cb.get("bytes_per_round", {})
+    la, lb = ca.get("final_loss", {}), cb.get("final_loss", {})
+    for name in sorted(set(ba) | set(bb)):
+        lines.append(
+            f"point {name:17s} {ba.get(name, 0) / 1e3:8.2f} kB/rd -> "
+            f"{bb.get(name, 0) / 1e3:8.2f} kB/rd   loss "
+            f"{fmt(la.get(name, float('nan'))):>10s} -> "
+            f"{fmt(lb.get(name, float('nan'))):>10s}")
+    for meta in ("n_clients", "param_dim", "rounds", "grid_points"):
+        if ca.get(meta) != cb.get(meta):
+            lines.append(f"WARNING: {meta} differs "
+                         f"({ca.get(meta)} -> {cb.get(meta)}) — "
+                         "walls/bytes not comparable")
+    return "\n".join(lines)
+
+
 def diff(a_path: str, b_path: str) -> str:
     a, b = load(a_path), load(b_path)
     lines = [f"baseline:  {a_path}", f"variant:   {b_path}", ""]
+    out = []
     if "kernel_fused_sweep" in a and "kernel_fused_sweep" in b:
-        return diff_kernel_section(a, b, lines)
+        out.append(diff_kernel_section(a, b, lines))
+        lines = [""]
+    if "comm_frontier" in a and "comm_frontier" in b:
+        out.append(diff_comm_section(a, b, lines))
+        lines = [""]
+    if out:
+        return "\n".join(out)
     ra, rb = a["roofline"], b["roofline"]
     for key in ("t_compute_s", "t_memory_s", "t_collective_s",
                 "step_lower_bound_s", "useful_flops_ratio"):

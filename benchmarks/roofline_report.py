@@ -114,6 +114,40 @@ def kernel_sweep_report(bench_path: str) -> str:
     ])
 
 
+def comm_report(bench_path: str) -> str:
+    """Bytes-on-wire lines for the compressed-gossip frontier, read from
+    the ``comm_frontier`` section ``benchmarks/run.py`` merges into
+    BENCH_sweep.json — printed next to the HBM numbers so the network
+    side of the roofline sits in the same report.  Empty string when the
+    section (or the file) is absent."""
+    try:
+        with open(bench_path) as f:
+            sec = json.load(f).get("comm_frontier")
+    except (OSError, json.JSONDecodeError):
+        return ""
+    if not sec:
+        return ""
+    lines = [
+        "",
+        "## compressed gossip frontier (comm_frontier)",
+        f"n_clients {sec.get('n_clients')}, param_dim "
+        f"{sec.get('param_dim')}, {sec.get('grid_points')} compressor "
+        f"points in one program (sweep {sec.get('sweep_wall_s')}s vs "
+        f"sequential {sec.get('sequential_wall_s')}s, "
+        f"{sec.get('speedup')}x)",
+        "| point | bytes/round | bits/coord | final loss |",
+        "|---|---|---|---|",
+    ]
+    bpr = sec.get("bytes_per_round", {})
+    bpc = sec.get("bits_per_coord", {})
+    loss = sec.get("final_loss", {})
+    for name in sorted(bpr, key=lambda k: bpr[k]):
+        lines.append(f"| {name} | {bpr[name] / 1e3:.2f} kB "
+                     f"| {bpc.get(name, float('nan')):.2f} "
+                     f"| {loss.get(name, float('nan')):.4g} |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
@@ -128,6 +162,9 @@ def main():
     ks = kernel_sweep_report(args.bench)
     if ks:
         print(ks)
+    cr = comm_report(args.bench)
+    if cr:
+        print(cr)
     worst = sorted((r for r in rows if not r.get("error")),
                    key=lambda r: r["useful_ratio"])[:5]
     print("\nworst useful-FLOP ratios:",

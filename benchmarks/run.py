@@ -169,6 +169,34 @@ def main() -> None:
                 })
         record("fig_cohort", rows, check, us)
 
+    if wanted("fig_comm_frontier"):
+        from benchmarks import fig_comm_frontier as m
+        if args.quick:
+            m.use_quick_grid()
+        Rf = 10 if args.quick else 30
+        rows = m.run(rounds=Rf, sequential=args.sequential)
+        us = np.mean([r["curves"]["wall_s"] / r["curves"]["iters"]
+                      for r in rows]) * 1e6
+        check = m.check(rows)
+        if not args.sequential:
+            # the compressor grid both ways: one mixed-kind traced operand
+            # (lax.switch over kind_id) vs one fresh jit per native kind
+            check["sweep_vs_sequential_speedup"] = ratio_section(
+                "comm_frontier", m, rows, Rf,
+                "compressed gossip (none + topk rates + qsgd bits as one "
+                "mixed-kind traced operand)",
+                extra={
+                    "n_clients": m.N, "param_dim": m.D,
+                    "bytes_per_round": {
+                        r["name"]: r["bytes_per_round"] for r in rows},
+                    "bits_per_coord": {
+                        r["name"]: round(r["bits_per_coord"], 2)
+                        for r in rows},
+                    "final_loss": {
+                        r["name"]: r["final_loss"] for r in rows},
+                })
+        record("fig_comm_frontier", rows, check, us)
+
     if wanted("fig7_speedup"):
         from benchmarks import fig7_speedup as m
         rows = m.run(sequential=args.sequential)
@@ -211,6 +239,12 @@ def main() -> None:
         assert "cohort_grid" in bench_sweep, \
             "fig_cohort ran but BENCH_sweep.json gained no " \
             "cohort_grid section"
+    if wanted("fig_comm_frontier") and args.quick and not args.sequential:
+        # CI contract: the quick run must record the compression frontier,
+        # and the merge below must retain the other figures' sections
+        assert "comm_frontier" in bench_sweep, \
+            "fig_comm_frontier ran but BENCH_sweep.json gained no " \
+            "comm_frontier section"
     if wanted("kernel_bench") and args.quick:
         # CI contract: the kernel job's quick run must record the
         # sweep-major fused-kernel section

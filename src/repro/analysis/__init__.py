@@ -1,2 +1,10 @@
 from repro.analysis.hlo import collective_bytes, parse_collectives  # noqa: F401
 from repro.analysis.roofline import roofline_terms, model_flops  # noqa: F401
+from repro.analysis.comm import (  # noqa: F401
+    device_wire_bytes,
+    payload_row_bytes,
+    round_edges,
+    round_wire_bytes,
+    spec_bits_per_coord,
+    sweep_round_bytes,
+)

@@ -1,0 +1,220 @@
+"""Bytes-on-wire accounting for (compressed) gossip rounds.
+
+The communication side of the roofline: where ``repro.analysis.roofline``
+models HBM traffic and FLOPs, this module models what a DEPOSITUM comm
+round puts on the *network* — per directed edge, per client row, per
+round — under any :class:`~repro.core.schedule.MixSchedule` and any
+:class:`~repro.core.compression.CompressionSpec`.  It is the unit behind
+the ``comm_frontier`` section of ``BENCH_sweep.json``
+(``benchmarks/fig_comm_frontier.py``) and the payload-aware backend
+suggestion (``repro.training.backends.suggest_backend``).
+
+The model is **algorithmic** bytes: one row payload per transmitting
+directed edge of the round's effective graph — what a peer-to-peer
+deployment ships — not the exact bytes of the XLA collective that
+*simulates* it on one host (an ``all_gather`` on a fully-replicated mesh
+moves more).  Counting rules, per the schedule kind:
+
+* constant/stacked/alternating — every nonzero off-diagonal edge of the
+  round's W transmits once.
+* chebyshev — each round runs ``cheby_k`` collectives over the base
+  graph: k times the base edges.
+* lazy / cohort — only edges with both endpoints active transmit; with a
+  concrete round index the drawn mask is counted exactly, otherwise the
+  expectation over the sampler (Bernoulli: p^2 per edge; fixed-size k:
+  k(k-1)/(n(n-1)); pre-drawn masks: their empirical mean activity).
+
+Per-row payload, per the compression spec: dense f32 rows (no spec /
+``none``); value+index pairs for the sparse kinds (``wire_k`` slots when
+packed, else the traced-rate ``ceil(rate * d)`` — the accountable payload
+even while the collective ships dense-shaped rows); int8 words + one f32
+norm for qsgd.  All functions are host-side (concrete operands) and
+vectorise over sweep-stacked specs/schedules, returning ``(S,)`` arrays.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.compression import KIND_IDS, CompressionSpec, wire_mode
+from repro.core.mixing import MixPlan, as_dense
+from repro.core.schedule import MixSchedule, as_schedule
+
+#: f32 values / int32 indices on the wire.
+VALUE_BYTES = 4
+INDEX_BYTES = 4
+#: qsgd ships one signed level word per coordinate + one norm per row.
+QSGD_WORD_BYTES = 1
+QSGD_NORM_BYTES = 4
+
+
+def payload_row_bytes(spec: Optional[CompressionSpec], d: int) -> np.ndarray:
+    """Bytes one client row of one mixed variable ships per collective.
+
+    Vectorised over sweep-stacked specs (returns a scalar array for
+    unstacked specs, ``(S,)`` for stacked ones).  Concrete specs only.
+    """
+    d = int(d)
+    dense = np.asarray(float(d * VALUE_BYTES))
+    if spec is None or spec.kind == "none":
+        return dense
+
+    def sparse_bytes():
+        if spec.wire_k > 0:
+            k = np.minimum(spec.wire_k, d)
+            return np.asarray(float(k * (VALUE_BYTES + INDEX_BYTES)))
+        rate = np.asarray(spec.rate, np.float64)
+        k = np.clip(np.round(rate * d), 1, d)
+        return k * (VALUE_BYTES + INDEX_BYTES)
+
+    quant = np.asarray(float(d * QSGD_WORD_BYTES + QSGD_NORM_BYTES))
+    if spec.kind in ("topk", "randk"):
+        return np.broadcast_to(sparse_bytes(),
+                               np.shape(np.asarray(spec.rate))).copy()
+    if spec.kind == "qsgd":
+        return np.broadcast_to(quant,
+                               np.shape(np.asarray(spec.bits))).copy()
+    # mixed: elementwise dispatch on the (concrete) kind_id leaf
+    kid = np.asarray(spec.kind_id)
+    table = np.stack(np.broadcast_arrays(
+        dense, sparse_bytes(), sparse_bytes(), quant))
+    return np.choose(np.minimum(kid, len(KIND_IDS) - 1), table)
+
+
+def collectives_per_round(sched: MixSchedule | MixPlan) -> int:
+    """How many collectives one comm round runs (chebyshev: its k)."""
+    sched = as_schedule(sched)
+    return max(1, sched.plan.cheby_k) if sched.plan.kind == "chebyshev" \
+        else 1
+
+
+def _dense_edges(W: np.ndarray, atol: float = 1e-12) -> float:
+    """Directed transmitting edges of a concrete W: nonzero off-diagonal."""
+    W = np.asarray(W)
+    off = W - np.diag(np.diag(W))
+    return float(np.count_nonzero(np.abs(off) > atol))
+
+
+def _base_edges(plan: MixPlan, n: int | None) -> float:
+    """Directed edges of the plan's per-collective base graph."""
+    if plan.kind == "chebyshev":
+        plan = plan.base_plan()
+    if plan.kind == "identity":
+        return 0.0
+    if plan.kind == "circulant":
+        if n is None:
+            raise ValueError("edge count over a circulant plan needs n")
+        return float(n * len(plan.offsets))
+    if plan.kind == "complete":
+        if n is None:
+            raise ValueError("edge count over a complete plan needs n")
+        return float(n * (n - 1))
+    return _dense_edges(plan.W)
+
+
+def _active_edge_fraction(sched: MixSchedule, r: int | None) -> float:
+    """Fraction of base edges transmitting in a lazy/cohort round."""
+    if sched.active is not None:
+        a = np.asarray(sched.active)
+        if r is not None:
+            a = a[min(int(r), a.shape[0] - 1)]
+            W = np.asarray(as_dense(sched.plan,
+                                    a.shape[-1]).W)
+            off = np.abs(W - np.diag(np.diag(W))) > 1e-12
+            total = max(np.count_nonzero(off), 1)
+            act = np.count_nonzero(off * np.outer(a > 0.5, a > 0.5))
+            return float(act) / total
+        p = float(np.mean(a))
+        return p * p
+    sampler = sched.sampler
+    n_eff = float(np.asarray(sampler.n_eff))
+    if r is not None:
+        a = np.asarray(sampler.mask_at(int(r)))
+        W = np.asarray(as_dense(sched.plan, a.shape[-1]).W)
+        off = np.abs(W - np.diag(np.diag(W))) > 1e-12
+        total = max(np.count_nonzero(off), 1)
+        return float(np.count_nonzero(
+            off * np.outer(a > 0.5, a > 0.5))) / total
+    if sampler.kind == "bernoulli":
+        p = float(np.asarray(sampler.p_active))
+        return p * p
+    if sampler.kind == "fixed":
+        k = min(float(np.asarray(sampler.k)), n_eff)
+        return (k * max(k - 1, 0.0)) / max(n_eff * (n_eff - 1), 1.0)
+    return 1.0  # full participation
+
+
+def round_edges(sched: MixSchedule | MixPlan, n: int | None = None,
+                r: int | None = None) -> float:
+    """Transmitting directed edges of one comm round (one collective).
+
+    ``r=None`` returns the expectation for randomised kinds and the
+    round-0 graph for ``stacked``/``alternating`` (pass ``r`` for exact
+    per-round counts).  Unswept operands only — iterate ``sched.point(s)``
+    (or use :func:`sweep_round_bytes`) for stacked ones.
+    """
+    sched = as_schedule(sched)
+    if sched.is_stacked:
+        raise ValueError("round_edges takes one sweep point "
+                         "(sched.point(s)); see sweep_round_bytes")
+    if sched.kind in ("stacked", "alternating"):
+        return _dense_edges(as_dense(sched.plan_at(r or 0), n).W)
+    base = _base_edges(sched.plan, n)
+    if sched.kind in ("lazy", "cohort"):
+        return base * _active_edge_fraction(sched, r)
+    return base
+
+
+def round_wire_bytes(sched: MixSchedule | MixPlan, d: int,
+                     n: int | None = None, r: int | None = None,
+                     n_vars: int = 2) -> np.ndarray:
+    """Total bytes on the wire for one comm round of the whole graph.
+
+    ``d`` is the flattened per-client parameter dimension; ``n_vars`` the
+    number of variables each comm step mixes (DEPOSITUM gossips x **and**
+    the tracking variable y, so the default is 2).  Chebyshev rounds
+    multiply by their k collectives.  Vectorises over a sweep-stacked
+    *spec* on an unswept schedule; for fully stacked schedules use
+    :func:`sweep_round_bytes`.
+    """
+    sched = as_schedule(sched)
+    edges = round_edges(sched, n, r)
+    per_row = payload_row_bytes(sched.compress, d)
+    return edges * per_row * collectives_per_round(sched) * n_vars
+
+
+def sweep_round_bytes(sched: MixSchedule, d: int, n: int | None = None,
+                      r: int | None = None, n_vars: int = 2) -> np.ndarray:
+    """(S,) expected bytes/round per sweep point of a stacked schedule."""
+    if not sched.is_stacked:
+        return np.atleast_1d(round_wire_bytes(sched, d, n, r, n_vars))
+    return np.asarray([
+        float(round_wire_bytes(sched.point(s), d, n, r, n_vars))
+        for s in range(sched.n_sweep)])
+
+
+def device_wire_bytes(sched: MixSchedule | MixPlan, d: int, n_clients: int,
+                      n_devices: int, n_vars: int = 2) -> float:
+    """Bytes ONE device sends per comm round on the shard_map backend —
+    the quantity the backend cost model compares against the latency
+    floor.  Each device holds ``n_clients / n_devices`` rows; every
+    collective ships each row's payload once per neighbor exchange
+    (circulant: per offset) or once into the all_gather (dense/complete).
+    """
+    sched = as_schedule(sched)
+    if sched.is_stacked:
+        raise ValueError("device_wire_bytes takes one sweep point")
+    blk = max(int(n_clients) // max(int(n_devices), 1), 1)
+    plan = sched.plan
+    base = plan.base_plan() if plan.kind == "chebyshev" else plan
+    fanout = len(base.offsets) if base.kind == "circulant" else 1
+    per_row = float(np.max(payload_row_bytes(sched.compress, d)))
+    return blk * per_row * fanout * collectives_per_round(sched) * n_vars
+
+
+def spec_bits_per_coord(spec: Optional[CompressionSpec],
+                        d: int) -> np.ndarray:
+    """Wire bits per coordinate — the x-axis of the accuracy-vs-bytes
+    frontier (dense f32 = 32)."""
+    return payload_row_bytes(spec, d) * 8.0 / float(d)

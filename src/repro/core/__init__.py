@@ -46,6 +46,21 @@ from repro.core.cohort import (  # noqa: F401
     pad_plan,
     stack_cohorts,
 )
+from repro.core.compression import (  # noqa: F401
+    CommMemory,
+    CompressionSpec,
+    active_compression,
+    as_mixed,
+    choco_mix,
+    comm_memory,
+    comm_round_keys,
+    compress,
+    compression_of,
+    pack_payload,
+    stack_specs,
+    unpack_payload,
+    wire_mode,
+)
 from repro.core.schedule import (  # noqa: F401
     MixSchedule,
     ScheduleMixer,

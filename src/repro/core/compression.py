@@ -1,0 +1,454 @@
+"""Compression as a *traced operand*: the :class:`CompressionSpec` pytree.
+
+Communication cost is DEPOSITUM's motivation — the paper attacks it with
+local updates (T0); compression of what *is* sent is the complementary
+lever (Yan et al.'s compressed decentralized prox SGD; CHOCO-gossip,
+Koloskova et al. 2019; the accuracy-vs-bytes frontier of "Balancing
+Communication and Computing Costs", arXiv 2107.12048).  The repo's old
+``extensions.compressed_gossip_round`` implemented exactly this, but as a
+dead-end standalone mixer: outside the MixPlan/MixSchedule operand stack,
+unable to ride the shard_map collectives, unsweepable.  This module
+promotes it to a first-class operand:
+
+* ``none``        — identity.  A schedule carrying it executes the plain
+  dense path bit-exactly (the compression machinery is bypassed at trace
+  time — static ``kind`` dispatch).
+* ``topk(rate)``  — keep the ``ceil(rate*d)`` largest-magnitude
+  coordinates per client row (threshold semantics, matching the legacy
+  ``topk_compress``).  ``rate`` is a **traced leaf**: a whole rate grid
+  shares one compiled program.
+* ``randk(rate)`` — Bernoulli(rate) coordinate sampling scaled by
+  ``1/rate`` (unbiased); keys fold in the round index.
+* ``qsgd(bits)``  — QSGD-style stochastic quantisation to ``2^bits - 1``
+  levels of each row's max magnitude (unbiased); ``bits`` is a traced
+  leaf too.
+* ``mixed``       — the universal sweep form: ``kind_id`` becomes a traced
+  leaf dispatched through ``lax.switch``, so a grid that *mixes
+  compressor kinds* (top-k vs rand-k vs qsgd vs none) still runs as ONE
+  compiled program.  :func:`stack_specs` converts heterogeneous specs to
+  this form automatically.
+
+Static structure (``kind`` plus the wire-payload capacities ``wire_k`` /
+``wire_bits``) lives in pytree aux_data; ``rate``/``bits``/``ef_step``/
+``key``/``kind_id`` are leaves, so specs stack on a leading sweep axis and
+vmap through the sweep engine exactly like :class:`~repro.core.hyper.
+Hyper` / :class:`~repro.core.mixing.MixPlan` / :class:`~repro.core.cohort.
+CohortSampler`.
+
+Execution is CHOCO-style error feedback around *any* mixing operand: each
+mixed variable keeps a public-copy table ``xhat`` (the compression memory
+— untransmitted residual is retried, never lost) and a running mix
+``s = W @ xhat`` maintained **incrementally** from the compressed
+increments, so only ``q = C(x - xhat)`` ever crosses the wire:
+
+    q     = C(x - xhat)
+    xhat' = xhat + q
+    s'    = s + mix(q)          # the only communication of the round
+    x'    = x + ef_step * (s' - xhat')
+
+:func:`choco_mix` implements one such exchange; ``repro.core.depositum``
+carries the :class:`CommMemory` pair per mixed variable (x and y) as the
+``comm`` field of the training state.  On the stacked-vmap backend
+``mix(q)`` is the ordinary dense contraction of the (sparse-valued) q
+rows; on the shard_map backend the round program uses the backend's
+*wire* mixer instead, which packs q into value/index pairs (sparse kinds)
+or int8 words + per-row norms (qsgd) before the ppermute/all_gather — see
+:func:`pack_payload` and ``repro.core.schedule.shard_compressed_qmix`` —
+so bytes on the wire actually shrink, not just FLOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+_KINDS = ("none", "topk", "randk", "qsgd", "mixed")
+
+#: ``lax.switch`` branch order of the ``mixed`` kind (also the values the
+#: ``kind_id`` leaf takes).  Stable across releases: recorded specs replay.
+KIND_IDS = {"none": 0, "topk": 1, "randk": 2, "qsgd": 3}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    """What the gossip step transmits, as a traced operand.
+
+    Build with the classmethod constructors.  ``kind``, ``wire_k`` and
+    ``wire_bits`` are static (aux_data): two specs trace to the same
+    program iff they agree on them.  Everything else is a leaf and may
+    carry a leading ``(S,)`` sweep axis after :func:`stack_specs`.
+
+    ``wire_k`` (sparse kinds) / ``wire_bits`` (qsgd) size the *packed
+    payload* the shard_map backend puts on the wire — payload shapes must
+    be static under XLA, so the wire capacity cannot be the traced rate
+    itself.  ``wire_k=0`` (the default) disables packing: compression
+    still happens (and is accounted), but collectives carry the
+    dense-shaped sparse rows — the simulation form.  Size ``wire_k >=
+    ceil(max_rate * d)`` to keep the packed path equivalent to the
+    unpacked one.
+    """
+
+    kind: str                                 # static
+    wire_k: int = 0                           # static: packed slots per row
+    wire_bits: int = 8                        # static: qsgd word width
+    rate: Optional[jnp.ndarray] = None        # topk/randk: () or (S,) f32
+    bits: Optional[jnp.ndarray] = None        # qsgd: () or (S,) f32
+    ef_step: Optional[jnp.ndarray] = None     # CHOCO gamma: () or (S,) f32
+    key: Optional[jnp.ndarray] = None         # randk/qsgd PRNG key
+    kind_id: Optional[jnp.ndarray] = None     # mixed: () or (S,) int32
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return ((self.rate, self.bits, self.ef_step, self.key, self.kind_id),
+                (self.kind, self.wire_k, self.wire_bits))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kind, wire_k, wire_bits = aux
+        rate, bits, ef_step, key, kind_id = children
+        return cls(kind=kind, wire_k=wire_k, wire_bits=wire_bits, rate=rate,
+                   bits=bits, ef_step=ef_step, key=key, kind_id=kind_id)
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def none(cls) -> "CompressionSpec":
+        """Dense gossip (bit-exact with no spec at all)."""
+        return cls(kind="none", ef_step=jnp.asarray(1.0, jnp.float32))
+
+    @classmethod
+    def topk(cls, rate: float, *, ef_step: float = 0.3,
+             wire_k: int = 0) -> "CompressionSpec":
+        """Keep the ``ceil(rate * d)`` largest-magnitude coordinates per
+        client row (threshold semantics: ties at the k-th magnitude all
+        survive, matching the legacy ``extensions.topk_compress``)."""
+        _check_rate(rate)
+        return cls(kind="topk", wire_k=int(wire_k),
+                   rate=jnp.asarray(rate, jnp.float32),
+                   ef_step=jnp.asarray(ef_step, jnp.float32))
+
+    @classmethod
+    def randk(cls, rate: float, *, seed: int = 0,
+              key: jnp.ndarray | None = None, ef_step: float = 0.3,
+              wire_k: int = 0) -> "CompressionSpec":
+        """Bernoulli(rate) coordinate sampling scaled by 1/rate — unbiased
+        (``E[C(x)] = x``); the per-round key is ``fold_in(key, r)``."""
+        _check_rate(rate)
+        return cls(kind="randk", wire_k=int(wire_k),
+                   rate=jnp.asarray(rate, jnp.float32),
+                   ef_step=jnp.asarray(ef_step, jnp.float32),
+                   key=key if key is not None else jax.random.PRNGKey(seed))
+
+    @classmethod
+    def qsgd(cls, bits: float, *, seed: int = 0,
+             key: jnp.ndarray | None = None, ef_step: float = 0.3,
+             wire_bits: int = 8) -> "CompressionSpec":
+        """QSGD-style stochastic rounding to ``2^bits - 1`` levels of each
+        row's max magnitude — unbiased.  ``bits`` is traced (a bits grid
+        shares one program); ``wire_bits`` statically sizes the packed
+        wire word (int8 ships levels up to 127, i.e. concrete
+        ``bits <= 7``)."""
+        if float(bits) < 1:
+            raise ValueError(f"qsgd needs bits >= 1, got {bits}")
+        return cls(kind="qsgd", wire_bits=int(wire_bits),
+                   bits=jnp.asarray(bits, jnp.float32),
+                   ef_step=jnp.asarray(ef_step, jnp.float32),
+                   key=key if key is not None else jax.random.PRNGKey(seed))
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def is_stacked(self) -> bool:
+        return self.ef_step is not None and jnp.ndim(self.ef_step) > 0
+
+    @property
+    def n_sweep(self) -> int:
+        return int(self.ef_step.shape[0]) if self.is_stacked else 1
+
+    def point(self, s: int) -> "CompressionSpec":
+        if not self.is_stacked:
+            return self
+        return jax.tree_util.tree_map(lambda v: v[s], self)
+
+
+def _check_rate(rate: float) -> None:
+    r = float(jnp.min(jnp.asarray(rate)))
+    R = float(jnp.max(jnp.asarray(rate)))
+    if not (0.0 < r and R <= 1.0):
+        raise ValueError(f"compression rate must be in (0, 1], got {rate}")
+
+
+def as_mixed(spec: CompressionSpec) -> CompressionSpec:
+    """Universal sweep form: kind dispatch becomes a traced ``kind_id``.
+
+    Unused leaves are filled with inert defaults so any two mixed specs
+    share one pytree structure (and therefore stack).  ``none`` maps to
+    ``ef_step=1`` semantics through the identity branch of the CHOCO
+    update — *approximately* the dense mix (the incremental ``s`` running
+    sum accumulates fp error); for the bit-exact dense path use an
+    un-mixed ``none`` spec (or no spec), which bypasses entirely.
+    """
+    if spec.kind == "mixed":
+        return spec
+    if spec.kind not in KIND_IDS:
+        raise ValueError(f"unknown compression kind {spec.kind!r}")
+    one = jnp.asarray(1.0, jnp.float32)
+    return CompressionSpec(
+        kind="mixed", wire_k=0, wire_bits=spec.wire_bits,
+        rate=one if spec.rate is None else jnp.asarray(spec.rate, jnp.float32),
+        bits=(jnp.asarray(8.0, jnp.float32) if spec.bits is None
+              else jnp.asarray(spec.bits, jnp.float32)),
+        ef_step=(one if spec.ef_step is None
+                 else jnp.asarray(spec.ef_step, jnp.float32)),
+        key=spec.key if spec.key is not None else jax.random.PRNGKey(0),
+        kind_id=jnp.asarray(KIND_IDS[spec.kind], jnp.int32))
+
+
+def stack_specs(specs: Sequence[CompressionSpec]) -> CompressionSpec:
+    """Stack specs on a new leading sweep axis.
+
+    Same-kind specs (matching wire statics) stack directly; heterogeneous
+    kinds are converted to the :func:`as_mixed` form first, so a grid of
+    ``topk`` rates x ``qsgd`` bits x a ``none`` baseline still becomes one
+    traced operand — and one compiled program.
+    """
+    specs = list(specs)
+    if not specs:
+        raise ValueError("need at least one CompressionSpec to stack")
+    if any(s.is_stacked for s in specs):
+        raise ValueError("specs are already sweep-stacked")
+    auxs = {(s.kind, s.wire_k, s.wire_bits) for s in specs}
+    if len(auxs) > 1 or specs[0].kind == "mixed" or any(
+            s.kind in ("none", "topk") and any(
+                o.kind in ("randk", "qsgd", "mixed") for o in specs)
+            for s in specs):
+        specs = [as_mixed(s) for s in specs]
+    return jax.tree_util.tree_map(lambda *vs: jnp.stack(vs), *specs)
+
+
+def compression_of(operand) -> Optional[CompressionSpec]:
+    """The spec attached to a MixSchedule / ScheduleMixer (else None)."""
+    sched = getattr(operand, "schedule", operand)
+    return getattr(sched, "compress", None)
+
+
+def active_compression(operand) -> Optional[CompressionSpec]:
+    """The attached spec when it actually compresses.  ``kind="none"``
+    returns None: the round program must take the untouched dense path
+    (bit-exactness pin), not the CHOCO arithmetic with a perfect
+    compressor."""
+    spec = compression_of(operand)
+    if spec is None or spec.kind == "none":
+        return None
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Row-wise compressors (reference, dense-shaped output)
+# ---------------------------------------------------------------------------
+
+def _topk_rows(flat: jnp.ndarray, rate) -> jnp.ndarray:
+    """Threshold top-k with a *traced* k = round(rate * d), matching the
+    legacy ``topk_compress`` semantics exactly for integer rate*d."""
+    d = flat.shape[-1]
+    k = jnp.clip(jnp.round(jnp.asarray(rate, jnp.float32) * d), 1, d)
+    k = k.astype(jnp.int32)
+    mag = jnp.abs(flat)
+    sorted_desc = -jnp.sort(-mag, axis=-1)
+    thresh = jnp.take(sorted_desc, k - 1, axis=-1, mode="clip")[..., None]
+    return flat * (mag >= thresh)
+
+
+def _randk_rows(flat: jnp.ndarray, rate, key) -> jnp.ndarray:
+    rate = jnp.asarray(rate, jnp.float32)
+    u = jax.random.uniform(key, flat.shape)
+    keep = (u < rate).astype(flat.dtype)
+    return flat * keep / jnp.maximum(rate, 1e-12).astype(flat.dtype)
+
+
+def _qsgd_rows(flat: jnp.ndarray, bits, key) -> jnp.ndarray:
+    # Inf-norm scaling (natural-compression variant of QSGD): the argmax
+    # coordinate quantises to level s exactly, so ``max|q|`` recovers the
+    # scale and :func:`pack_payload` round-trips quantised rows exactly —
+    # an L2 scale would be unrecoverable from q and re-quantising on the
+    # wire would desync the CHOCO ``s = W @ xhat`` invariant.
+    s = _qsgd_levels(bits)
+    norm = jnp.max(jnp.abs(flat.astype(jnp.float32)),
+                   axis=-1, keepdims=True)
+    u = jax.random.uniform(key, flat.shape)
+    scaled = jnp.abs(flat.astype(jnp.float32)) / jnp.maximum(norm, 1e-12) * s
+    levels = jnp.floor(scaled + u)       # stochastic rounding: E = scaled
+    out = jnp.sign(flat.astype(jnp.float32)) * norm * levels / s
+    return out.astype(flat.dtype)
+
+
+def _qsgd_levels(bits) -> jnp.ndarray:
+    return jnp.maximum(2.0 ** jnp.asarray(bits, jnp.float32) - 1.0, 1.0)
+
+
+def _compress_rows(spec: CompressionSpec, flat: jnp.ndarray,
+                   key) -> jnp.ndarray:
+    if spec.kind == "none":
+        return flat
+    if spec.kind == "topk":
+        return _topk_rows(flat, spec.rate)
+    if spec.kind == "randk":
+        return _randk_rows(flat, spec.rate, key)
+    if spec.kind == "qsgd":
+        return _qsgd_rows(flat, spec.bits, key)
+    if spec.kind == "mixed":
+        return jax.lax.switch(
+            spec.kind_id,
+            [lambda f, rt, b, k: f,
+             lambda f, rt, b, k: _topk_rows(f, rt),
+             lambda f, rt, b, k: _randk_rows(f, rt, k),
+             lambda f, rt, b, k: _qsgd_rows(f, b, k)],
+            flat, spec.rate, spec.bits, key)
+    raise ValueError(f"unknown compression kind {spec.kind!r}")
+
+
+def _needs_key(spec: CompressionSpec) -> bool:
+    return spec.kind in ("randk", "qsgd", "mixed")
+
+
+def compress(spec: CompressionSpec, tree: PyTree,
+             key: jnp.ndarray | None = None) -> PyTree:
+    """Apply ``C`` to every leaf (rows = the leading client dim).
+
+    Randomised kinds draw per-leaf keys by folding the leaf index into
+    ``key`` (defaults to the spec's own key — pass a round-folded key so
+    draws differ per round).
+    """
+    if spec.kind == "none":
+        return tree
+    if key is None:
+        key = spec.key
+    if _needs_key(spec) and key is None:
+        raise ValueError(f"compression kind {spec.kind!r} needs a PRNG key")
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = []
+    for i, x in enumerate(leaves):
+        lk = None if key is None else jax.random.fold_in(key, i)
+        flat = x.reshape(x.shape[0], -1)
+        out.append(_compress_rows(spec, flat, lk).reshape(x.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# CHOCO error-feedback exchange
+# ---------------------------------------------------------------------------
+
+class CommMemory(NamedTuple):
+    """Error-feedback memory of one mixed variable (leading dim = clients).
+
+    ``xhat`` is the public-copy table every client agrees on (the legacy
+    ``CompressedGossipState.xhat``); ``s`` is the running mix ``W @ xhat``
+    maintained incrementally from compressed increments, so the dense
+    ``xhat`` table itself never has to cross the wire.
+    """
+
+    xhat: PyTree
+    s: PyTree
+
+
+def comm_memory(tree: PyTree) -> CommMemory:
+    """Fresh (zeroed) memory shaped like one mixed variable."""
+    z = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    return CommMemory(xhat=z, s=jax.tree_util.tree_map(jnp.zeros_like, tree))
+
+
+def comm_round_keys(spec: CompressionSpec, r) -> tuple:
+    """(key_x, key_y) for round ``r`` — None for deterministic kinds."""
+    if spec.key is None or not _needs_key(spec):
+        return None, None
+    kr = jax.random.fold_in(spec.key, jnp.asarray(r, jnp.int32))
+    return jax.random.fold_in(kr, 0), jax.random.fold_in(kr, 1)
+
+
+def choco_mix(spec: Optional[CompressionSpec], mixfn, tree: PyTree,
+              mem: CommMemory, key: jnp.ndarray | None = None
+              ) -> tuple[PyTree, CommMemory]:
+    """One CHOCO gossip exchange with error feedback.
+
+    ``mixfn`` is the backend's mix of *this round* (dense contraction,
+    shard_map collective, or the packed wire mixer) applied to the
+    compressed increment q — the only tensor that communicates.  With
+    ``spec`` None or ``none`` this degenerates to the plain dense
+    exchange, bit-exactly, memory untouched.
+    """
+    tm = jax.tree_util.tree_map
+    if spec is None or spec.kind == "none":
+        return mixfn(tree), mem
+    q = compress(spec, tm(lambda x, h: x - h, tree, mem.xhat), key)
+    xhat = tm(lambda h, qq: h + qq, mem.xhat, q)
+    s = tm(lambda sv, mq: sv + mq, mem.s, mixfn(q))
+    ef = spec.ef_step
+    out = tm(lambda x, sv, h: x + jnp.asarray(ef, x.dtype) * (sv - h),
+             tree, s, xhat)
+    return out, CommMemory(xhat=xhat, s=s)
+
+
+# ---------------------------------------------------------------------------
+# Wire payloads: what shard_map actually puts on the collective
+# ---------------------------------------------------------------------------
+
+def wire_mode(spec: Optional[CompressionSpec]) -> Optional[str]:
+    """How this spec packs on the wire: "sparse" (value/index pairs),
+    "quant" (int8 words + row norms), or None (dense-shaped collective —
+    compression simulated/accounted only)."""
+    if spec is None:
+        return None
+    if spec.kind in ("topk", "randk") and spec.wire_k > 0:
+        return "sparse"
+    if spec.kind == "qsgd":
+        return "quant"
+    return None
+
+
+def pack_payload(spec: CompressionSpec, flat: jnp.ndarray) -> tuple:
+    """Pack compressed rows ``(blk, d)`` into the wire payload tuple.
+
+    sparse: ``(values (blk, wire_k) f32-like, indices (blk, wire_k) i32)``
+    — the ``wire_k`` largest-magnitude entries per row (rows with more
+    nonzeros than ``wire_k`` are truncated; size the capacity to the max
+    swept rate).  quant: ``(words (blk, d) int8, norms (blk, 1) f32)`` —
+    signed QSGD levels, exact for levels <= 127 (bits <= 7).
+    """
+    mode = wire_mode(spec)
+    if mode == "sparse":
+        k = min(spec.wire_k, flat.shape[-1])
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        vals = jnp.take_along_axis(flat, idx, axis=-1)
+        return vals, idx.astype(jnp.int32)
+    if mode == "quant":
+        # same inf-norm scale as ``_qsgd_rows``: already-quantised rows
+        # carry integer levels w.r.t. ``max|q|``, so the round() is exact
+        s = _qsgd_levels(spec.bits)
+        norm = jnp.max(jnp.abs(flat.astype(jnp.float32)),
+                       axis=-1, keepdims=True)
+        words = jnp.clip(
+            jnp.round(flat.astype(jnp.float32)
+                      / jnp.maximum(norm, 1e-12) * s), -127, 127)
+        return words.astype(jnp.int8), norm
+    raise ValueError(f"spec {spec.kind!r} (wire_k={spec.wire_k}) has no "
+                     "wire payload; use the dense collective")
+
+
+def unpack_payload(spec: CompressionSpec, payload: tuple, d: int,
+                   dtype=jnp.float32) -> jnp.ndarray:
+    """Invert :func:`pack_payload` back to dense-shaped ``(rows, d)``."""
+    mode = wire_mode(spec)
+    if mode == "sparse":
+        vals, idx = payload
+        rows = vals.shape[0]
+        flat = jnp.zeros((rows, d), dtype)
+        return flat.at[jnp.arange(rows)[:, None], idx].set(
+            vals.astype(dtype))
+    if mode == "quant":
+        words, norm = payload
+        s = _qsgd_levels(spec.bits)
+        return (words.astype(jnp.float32) * norm / s).astype(dtype)
+    raise ValueError(f"spec {spec.kind!r} has no wire payload")

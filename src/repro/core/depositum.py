@@ -35,6 +35,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compression import (
+    CommMemory,
+    CompressionSpec,
+    active_compression,
+    choco_mix,
+    comm_memory,
+    comm_round_keys,
+)
 from repro.core.gossip import Mixer, identity_mixer
 from repro.core.hyper import Hyper
 from repro.core.mixing import resolve_mixer
@@ -165,7 +173,15 @@ def fused_eligibility(config: "DepositumConfig", state=None,
 
 
 class DepositumState(NamedTuple):
-    """All client variables; every leaf has leading dim = n_clients."""
+    """All client variables; every leaf has leading dim = n_clients.
+
+    ``comm`` is the compressed-communication memory: ``()`` (no leaves)
+    for dense runs, else ``{"x": CommMemory, "y": CommMemory}`` — one
+    CHOCO error-feedback pair (public copy ``xhat`` + running mix ``s``)
+    per mixed variable, built by ``init(compress=...)`` and updated on
+    every comm step.  An empty ``comm`` keeps the scan carry identical to
+    pre-compression states.
+    """
 
     x: PyTree       # model parameters (per client)
     y: PyTree       # gradient-tracking variable
@@ -173,6 +189,7 @@ class DepositumState(NamedTuple):
     mu: PyTree      # auxiliary momentum (Nesterov only; zeros otherwise)
     g: PyTree       # last stochastic gradient estimate
     t: jnp.ndarray  # iteration counter (int32 scalar)
+    comm: Any = ()  # compressed-gossip error-feedback memory (or ())
 
 
 def _zeros_like(tree):
@@ -186,7 +203,8 @@ def _broadcast_clients(params: PyTree, n_clients: int) -> PyTree:
 
 
 def init(params: PyTree, n_clients: int, stacked: bool = False,
-         n_max: int | None = None) -> DepositumState:
+         n_max: int | None = None,
+         compress: Any = None) -> DepositumState:
     """Initial state: identical x across clients, all auxiliaries zero.
 
     ``n_max`` pads the client axis beyond ``n_clients`` (the ragged-axis
@@ -194,6 +212,12 @@ def init(params: PyTree, n_clients: int, stacked: bool = False,
     schedule's eligibility mask keeps them out of mixing and
     :func:`step` freezes them in place — so one compiled program serves
     any effective ``n <= n_max``.
+
+    ``compress`` — a :class:`~repro.core.compression.CompressionSpec` or a
+    schedule carrying one — allocates the CHOCO error-feedback memory
+    (zeroed ``xhat``/``s`` pair per mixed variable) on ``state.comm``;
+    ``None`` (and a ``kind="none"`` spec) leave ``comm = ()`` so the carry
+    is unchanged.
     """
     if n_max is not None and n_max < n_clients:
         raise ValueError(f"n_max={n_max} < n_clients={n_clients}")
@@ -204,7 +228,13 @@ def init(params: PyTree, n_clients: int, stacked: bool = False,
             lambda v: jnp.concatenate(
                 [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)]), x)
     z = _zeros_like(x)
-    return DepositumState(x=x, y=z, nu=z, mu=z, g=z, t=jnp.zeros((), jnp.int32))
+    spec = (compress if isinstance(compress, CompressionSpec)
+            else active_compression(compress) if compress is not None
+            else None)
+    comm = ({"x": comm_memory(x), "y": comm_memory(x)}
+            if spec is not None and spec.kind != "none" else ())
+    return DepositumState(x=x, y=z, nu=z, mu=z, g=z,
+                          t=jnp.zeros((), jnp.int32), comm=comm)
 
 
 GradFn = Callable[[PyTree, Any], tuple[PyTree, Any]]
@@ -254,17 +284,33 @@ def step(
     round loops compute it once and pass it to every local step.
     """
     is_cohort_mixer = False
+    comm_spec = None       # active CompressionSpec of this round's schedule
+    qmix = None            # how the compressed increment q communicates
+    key_x = key_y = None
     if isinstance(mixer, (MixSchedule, ScheduleMixer)):
         is_cohort_mixer = getattr(mixer, "schedule", mixer).kind == "cohort"
         r = state.t // config.comm_period
         if active_mask is None:
             active_mask = schedule_round_mask(mixer, r)
+        comm_spec = active_compression(mixer)
+        wire_fn = getattr(mixer, "wire_fn", None)
         if isinstance(mixer, MixSchedule):
             sched = mixer
             mixer = lambda tree: apply_schedule(sched, r, tree)
         else:
             sm = mixer
             mixer = lambda tree: sm(tree, r)
+        if comm_spec is not None:
+            if not state.comm:
+                raise ValueError(
+                    "the schedule carries an active CompressionSpec but the "
+                    "state has no error-feedback memory; build it with "
+                    "init(..., compress=spec)")
+            # packed payloads on the wire when the backend supports it,
+            # else q rides the same collective the dense variable would
+            qmix = ((lambda tree: wire_fn(tree, r))
+                    if wire_fn is not None else mixer)
+            key_x, key_y = comm_round_keys(comm_spec, r)
     else:
         mixer, _plan = resolve_mixer(mixer)
     if hyper is None:
@@ -325,14 +371,36 @@ def step(
             hp.alpha, lam=hp.lam, theta=hp.theta,
         )
 
-    if isinstance(is_comm_step, bool):
-        x_next = mixer(x_half) if is_comm_step else x_half
+    def _gated_choco(half, mem, key):
+        """CHOCO exchange honoring the comm gate: returns (out, new_mem).
+
+        Collective-free steps (``is_comm_step=False``) touch neither the
+        tree nor the memory; a traced gate selects both (same caveat as
+        the dense path: collective-free mixers only).
+        """
+        if is_comm_step is False:
+            return half, mem
+        out, new_mem = choco_mix(comm_spec, qmix, half, mem, key)
+        if is_comm_step is True:
+            return out, new_mem
+        sel = lambda new, old: tm(
+            lambda a, b: jnp.where(is_comm_step, a, b), new, old)
+        return sel(out, half), CommMemory(xhat=sel(new_mem.xhat, mem.xhat),
+                                          s=sel(new_mem.s, mem.s))
+
+    if comm_spec is None:
+        mem_x = mem_y = None
+        if isinstance(is_comm_step, bool):
+            x_next = mixer(x_half) if is_comm_step else x_half
+        else:
+            # traced gate: only valid with collective-free mixers (dense
+            # einsum).
+            mixed = mixer(x_half)
+            x_next = tm(
+                lambda a, b: jnp.where(is_comm_step, a, b), mixed, x_half
+            )
     else:
-        # traced gate: only valid with collective-free mixers (dense einsum).
-        mixed = mixer(x_half)
-        x_next = tm(
-            lambda a, b: jnp.where(is_comm_step, a, b), mixed, x_half
-        )
+        x_next, mem_x = _gated_choco(x_half, state.comm["x"], key_x)
 
     # (3) fresh minibatch gradients at the *new* iterate
     g_next, aux = grad_fn(x_next, batch)
@@ -348,11 +416,17 @@ def step(
             lambda y, gn, go: y + c(hp.beta, y) * (gn - go),
             state.y, g_next, state.g,
         )
-    if isinstance(is_comm_step, bool):
-        y_next = mixer(y_half) if is_comm_step else y_half
+    if comm_spec is None:
+        if isinstance(is_comm_step, bool):
+            y_next = mixer(y_half) if is_comm_step else y_half
+        else:
+            mixed_y = mixer(y_half)
+            y_next = tm(lambda a, b: jnp.where(is_comm_step, a, b), mixed_y,
+                        y_half)
     else:
-        mixed_y = mixer(y_half)
-        y_next = tm(lambda a, b: jnp.where(is_comm_step, a, b), mixed_y, y_half)
+        y_next, mem_y = _gated_choco(y_half, state.comm["y"], key_y)
+    comm_next = (state.comm if comm_spec is None
+                 else {"x": mem_x, "y": mem_y})
 
     if active_mask is not None:
         # freeze inactive/padding rows: keep every old value where mask = 0
@@ -378,9 +452,21 @@ def step(
             nu_next = keep(nu_next, state.nu)
             mu_next = keep(mu_next, state.mu)
             g_next = keep(g_next, state.g)
+        if comm_spec is not None and is_comm_step is not False:
+            # frozen rows transmitted nothing: their error-feedback memory
+            # must not advance either (both backends agree on this select)
+            comm_next = {
+                "x": CommMemory(
+                    xhat=keep(mem_x.xhat, state.comm["x"].xhat),
+                    s=keep(mem_x.s, state.comm["x"].s)),
+                "y": CommMemory(
+                    xhat=keep(mem_y.xhat, state.comm["y"].xhat),
+                    s=keep(mem_y.s, state.comm["y"].s)),
+            }
 
     new_state = DepositumState(
-        x=x_next, y=y_next, nu=nu_next, mu=mu_next, g=g_next, t=state.t + 1
+        x=x_next, y=y_next, nu=nu_next, mu=mu_next, g=g_next,
+        t=state.t + 1, comm=comm_next
     )
     return new_state, aux
 

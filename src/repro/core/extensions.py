@@ -11,6 +11,18 @@
   *increments* against shared public copies x̂ — the x̂ table is the
   compression memory, so untransmitted mass is retried, never lost.  Cuts
   per-round gossip bytes to k/d of dense while still reaching consensus.
+
+  **Deprecated**: compression is now a first-class traced operand —
+  :class:`repro.core.compression.CompressionSpec` attaches to any
+  :class:`~repro.core.schedule.MixSchedule`
+  (``schedule.with_compression(spec)``), rides both execution backends
+  (packed payloads on the shard_map collectives), and sweeps over rates as
+  one compiled program.  The functions below remain as thin shims over
+  those primitives, with the *legacy numerics pinned* by
+  ``tests/test_robust_compressed.py`` (the one observable difference: the
+  new path keeps the running mix ``s = W @ xhat`` incrementally instead of
+  recomputing it dense each round — the shim recomputes, exactly as
+  before).
 """
 from __future__ import annotations
 
@@ -19,6 +31,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.compression import _topk_rows
+from repro.core.mixing import MixPlan, apply_mix
 
 PyTree = jax.Array
 
@@ -73,15 +88,17 @@ def make_trimmed_mean_mixer(W: np.ndarray, trim: int = 1):
 # ---------------------------------------------------------------------------
 
 def topk_compress(x: jax.Array, k: int):
-    """Keep the k largest-magnitude coordinates per client row; zero rest."""
+    """Keep the k largest-magnitude coordinates per client row; zero rest.
+
+    Deprecated shim: delegates to the traced-rate row compressor behind
+    ``CompressionSpec.topk`` (``repro.core.compression``), which uses the
+    same threshold semantics (ties at the k-th magnitude all survive).
+    """
     n = x.shape[0]
     flat = x.reshape(n, -1)
     d = flat.shape[1]
-    k = min(k, d)
-    mag = jnp.abs(flat)
-    thresh = -jnp.sort(-mag, axis=1)[:, k - 1 : k]    # k-th largest
-    mask = mag >= thresh
-    return (flat * mask).reshape(x.shape)
+    k = min(int(k), d)
+    return _topk_rows(flat, k / d).reshape(x.shape)
 
 
 class CompressedGossipState(NamedTuple):
@@ -107,11 +124,19 @@ def compressed_gossip_round(
     nothing is lost).  States then take a damped gossip step on the public
     copies:  x <- x + step * (W - I) xhat.  Returns (new_x, new_state,
     bytes_fraction = k/d traffic relative to dense gossip).
+
+    Deprecated shim: recomposed from the ``repro.core.compression``
+    primitives in the legacy order (compress -> xhat update -> *fresh*
+    dense mix of the public copies), so old trajectories reproduce.  New
+    code should attach a spec to its schedule
+    (``MixSchedule.with_compression(CompressionSpec.topk(rate))``) and let
+    ``depositum.step`` run the error-feedback exchange — same math, but
+    with the running mix ``s = W @ xhat`` maintained incrementally so only
+    the compressed increment ever crosses the wire.
     """
-    Wj = jnp.asarray(W, x.dtype)
     q = topk_compress(x - st.xhat, k)
     xhat = st.xhat + q
-    mixed = jnp.einsum("ij,j...->i...", Wj, xhat)
+    mixed = apply_mix(MixPlan.dense(jnp.asarray(W, x.dtype)), xhat)
     x_new = x + step * (mixed - xhat)
     d = x[0].size
     return x_new, CompressedGossipState(xhat=xhat), k / d

@@ -66,6 +66,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cohort import CohortSampler
+from repro.core.compression import (
+    CompressionSpec,
+    as_mixed,
+    pack_payload,
+    unpack_payload,
+    wire_mode,
+)
 from repro.core.mixing import (
     MixPlan,
     apply_mix,
@@ -136,18 +143,19 @@ class MixSchedule:
     active: Optional[jnp.ndarray] = None     # lazy: (R, n) or (S, R, n)
     period: int = 0                          # static (alternating only)
     sampler: Optional[CohortSampler] = None  # cohort / on-device lazy
+    compress: Optional[CompressionSpec] = None  # what comm steps transmit
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
-        return (self.plan, self.active, self.sampler), (self.kind,
-                                                        self.period)
+        return (self.plan, self.active, self.sampler,
+                self.compress), (self.kind, self.period)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         kind, period = aux
-        plan, active, sampler = children
+        plan, active, sampler, compress = children
         return cls(kind=kind, plan=plan, active=active, period=period,
-                   sampler=sampler)
+                   sampler=sampler, compress=compress)
 
     # -- constructors -------------------------------------------------------
     @classmethod
@@ -279,6 +287,23 @@ class MixSchedule:
     def from_topology(cls, topology: str, n: int, **kwargs) -> "MixSchedule":
         """Constant schedule for a named topology (sugar)."""
         return cls.constant(MixPlan.from_topology(topology, n, **kwargs))
+
+    def with_compression(self, spec: Optional[CompressionSpec]
+                         ) -> "MixSchedule":
+        """This schedule transmitting ``spec``-compressed payloads.
+
+        The spec rides as a leaf sub-pytree, so rate/bits sweep with the
+        schedule (``stack_schedules`` over per-rate copies).  ``spec=None``
+        — and a ``kind="none"`` spec — leave the round program on the
+        untouched dense path, bit-exactly.  Any other kind makes the
+        round's comm step a CHOCO error-feedback exchange: the state must
+        carry :class:`~repro.core.compression.CommMemory` per mixed
+        variable (``repro.core.depositum.init(compress=...)``).
+        """
+        if spec is not None and not isinstance(spec, CompressionSpec):
+            raise TypeError("with_compression takes a CompressionSpec, got "
+                            f"{type(spec).__name__}")
+        return dataclasses.replace(self, compress=spec)
 
     # -- introspection ------------------------------------------------------
     @property
@@ -466,10 +491,20 @@ class ScheduleMixer:
     Built by the execution backends; the round program recognises it and
     supplies ``r = t // T0`` from the iteration counter.  (A plain Mixer
     closure stays ``mix(tree) -> tree``.)
+
+    ``wire_fn`` — when the schedule carries a packable
+    :class:`~repro.core.compression.CompressionSpec` — is the backend's
+    *compressed-payload* mixer ``wire_fn(q_tree, r) -> mixed q``: the
+    shard_map backends pack each compressed increment into value/index
+    pairs (sparse kinds) or int8 words (qsgd) before the collective, so
+    the CHOCO exchange in ``depositum.step`` puts fewer bytes on the wire
+    than the dense ``fn``.  None means "mix q with ``fn``" (stacked-vmap
+    simulation, or an unpackable schedule kind).
     """
 
     fn: Callable[[PyTree, Any], PyTree]
     schedule: MixSchedule
+    wire_fn: Optional[Callable[[PyTree, Any], PyTree]] = None
 
     def __call__(self, tree: PyTree, r) -> PyTree:
         return self.fn(tree, r)
@@ -522,6 +557,83 @@ def shard_schedule_body(sched: MixSchedule, r, x_blk: jnp.ndarray,
     return out
 
 
+def wire_supported(sched: MixSchedule) -> bool:
+    """True when this schedule's compressed increments can cross the
+    collectives *packed* (:func:`shard_compressed_qmix`).
+
+    Needs a spec with a wire form (``wire_k > 0`` sparse, or qsgd) and a
+    schedule whose round mix is a single exchange: the dense-base family
+    (constant/stacked/alternating/lazy/cohort over dense plans — packed
+    ``all_gather`` + row contraction) or a constant circulant (packed
+    ``ppermute`` per offset).  Chebyshev rounds re-mix their own *output*
+    k times — only the first exchange could ship packed — and identity/
+    complete plans carry no per-edge payload to pack; those fall back to
+    the dense collective on q (compression still shapes the values and is
+    still accounted by ``repro.analysis.comm``).
+    """
+    if wire_mode(sched.compress) is None:
+        return False
+    if sched.plan.kind == "dense" and sched.kind in (
+            "constant", "stacked", "alternating", "lazy", "cohort"):
+        return True
+    return sched.plan.kind == "circulant" and sched.kind == "constant"
+
+
+def shard_compressed_qmix(sched: MixSchedule, r, q_blk: jnp.ndarray,
+                          axis_name, n: int) -> jnp.ndarray:
+    """Round ``r``'s mix of a compressed increment block, *packed on the
+    wire*, inside ``shard_map``.
+
+    ``q_blk`` is this shard's block of ``q = C(x - xhat)`` — sparse-valued
+    (top-k / rand-k) or quantised (qsgd) rows.  Where :func:`shard_body`
+    would put the dense block on the collective, this packs it first
+    (:func:`~repro.core.compression.pack_payload`): value/index pairs of
+    ``wire_k`` slots per row, or int8 words + a per-row norm.  The result
+    equals the dense mix of q whenever the payload fits its capacity
+    (``nnz <= wire_k``; qsgd levels <= 127) — rows past capacity truncate
+    to their largest-magnitude entries.
+
+    Only call under :func:`wire_supported`; the round matrix is derived
+    exactly as :func:`shard_schedule_body` does, so the two paths agree on
+    which edges are active.
+    """
+    spec = sched.compress
+    tm = jax.tree_util.tree_map
+    blk = q_blk.shape[0]
+    flat = q_blk.reshape(blk, -1)
+    d = flat.shape[-1]
+    payload = pack_payload(spec, flat)
+    plan = sched.plan
+    if plan.kind == "circulant":
+        # constant circulant: ppermute the packed payload per offset
+        out = plan.self_weight.astype(q_blk.dtype) * q_blk
+        for k, off in enumerate(plan.offsets):
+            perm = [((s + off) % n, s) for s in range(n)]
+            nb_payload = tm(
+                lambda p: jax.lax.ppermute(p, axis_name, perm), payload)
+            nb = unpack_payload(spec, nb_payload, d, q_blk.dtype)
+            out = out + plan.weights[k].astype(q_blk.dtype) * nb.reshape(
+                q_blk.shape)
+        return out
+    # dense family: all_gather the packed payload, unpack every client's
+    # q row, contract with this shard's rows of the round matrix
+    gathered = tm(
+        lambda p: jax.lax.all_gather(p, axis_name, axis=0, tiled=True),
+        payload)
+    q_full = unpack_payload(spec, gathered, d, q_blk.dtype).reshape(
+        (n,) + q_blk.shape[1:])
+    if sched.kind in ("stacked", "alternating"):
+        W = _point_traced(sched.plan, sched._round_index(r)).W
+    elif sched.kind in ("lazy", "cohort"):
+        W = _lazy_dense_matrix(plan.W, _schedule_active_mask(sched, r))
+    else:
+        W = plan.W
+    idx = jax.lax.axis_index(axis_name)
+    rows = jax.lax.dynamic_slice_in_dim(W, idx * blk, blk, axis=0)
+    return jnp.einsum("in,n...->i...", rows.astype(q_blk.dtype), q_full,
+                      precision=jax.lax.Precision.HIGHEST)
+
+
 # ---------------------------------------------------------------------------
 # Sweep plumbing: schedules as a sweep dimension
 # ---------------------------------------------------------------------------
@@ -538,10 +650,26 @@ def stack_schedules(schedules: Sequence[MixSchedule]) -> MixSchedule:
     schedules = list(schedules)
     if not schedules:
         raise ValueError("need at least one MixSchedule to stack")
+    specs = [s.compress for s in schedules]
+    if any(sp is not None for sp in specs):
+        # a compression grid: normalise the specs to one static structure
+        # (mixed kinds dispatch through a traced kind_id) so e.g. a
+        # topk-rates x qsgd-bits x none-baseline grid stacks — and runs —
+        # as one program
+        specs = [CompressionSpec.none() if sp is None else sp
+                 for sp in specs]
+        if len({(sp.kind, sp.wire_k, sp.wire_bits) for sp in specs}) > 1 \
+                or specs[0].kind == "mixed":
+            specs = [as_mixed(sp) for sp in specs]
+        schedules = [dataclasses.replace(s, compress=sp)
+                     for s, sp in zip(schedules, specs)]
     auxs = {(s.kind, s.period, s.plan.kind, s.plan.offsets, s.plan.cheby_k,
              s.plan.base_kind,
              None if s.sampler is None else (s.sampler.kind,
-                                             s.sampler.n_max))
+                                             s.sampler.n_max),
+             None if s.compress is None else (s.compress.kind,
+                                              s.compress.wire_k,
+                                              s.compress.wire_bits))
             for s in schedules}
     if len(auxs) > 1:
         raise ValueError(

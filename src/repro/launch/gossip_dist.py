@@ -26,7 +26,13 @@ from jax.experimental.shard_map import shard_map
 import jax.numpy as jnp
 
 from repro.core.mixing import MixPlan, shard_body
-from repro.core.schedule import MixSchedule, ScheduleMixer, shard_schedule_body
+from repro.core.schedule import (
+    MixSchedule,
+    ScheduleMixer,
+    shard_compressed_qmix,
+    shard_schedule_body,
+    wire_supported,
+)
 from repro.launch.sharding import Placement, spec_for
 from repro.models.common import is_axes_leaf
 
@@ -129,7 +135,26 @@ def make_shardmap_schedule_mixer(placement: Placement, axes_tree: Any,
             out_leaves.append(fn(leaf))
         return jax.tree_util.tree_unflatten(treedef, out_leaves)
 
-    return ScheduleMixer(mix, schedule)
+    # compressed increments cross the placement collectives packed, exactly
+    # as on the generic ShardMapBackend (shared shard_compressed_qmix body)
+    wire = None
+    if wire_supported(schedule):
+        def wire(tree, r):
+            rr = jnp.asarray(r, jnp.int32)
+            flat, treedef = jax.tree_util.tree_flatten(tree)
+            flat_specs = treedef.flatten_up_to(specs)
+
+            out_leaves = []
+            for leaf, spec in zip(flat, flat_specs):
+                fn = shard_map(
+                    lambda blk: shard_compressed_qmix(schedule, rr, blk,
+                                                      axis_name, n),
+                    mesh=mesh, in_specs=(spec,), out_specs=spec,
+                )
+                out_leaves.append(fn(leaf))
+            return jax.tree_util.tree_unflatten(treedef, out_leaves)
+
+    return ScheduleMixer(mix, schedule, wire_fn=wire)
 
 
 def make_shardmap_ring_mixer(placement: Placement, axes_tree: Any,

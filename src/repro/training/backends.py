@@ -48,7 +48,9 @@ from repro.core.schedule import (
     MixSchedule,
     ScheduleMixer,
     apply_schedule,
+    shard_compressed_qmix,
     shard_schedule_body,
+    wire_supported,
 )
 
 Mixer = Callable[[Any], Any]
@@ -162,7 +164,15 @@ class ShardMapBackend:
     def _schedule_mixer(self, sched: MixSchedule) -> Mixer:
         """Round-indexed mixer: per-round ``shard_body`` variants (masked
         ppermute/all_gather for lazy rounds, unrolled collectives for
-        chebyshev) inside one ``shard_map`` per leaf."""
+        chebyshev) inside one ``shard_map`` per leaf.
+
+        When the schedule carries a packable
+        :class:`~repro.core.compression.CompressionSpec`, the returned
+        mixer also exposes ``wire_fn``: the compressed increment q crosses
+        the collective *packed* (value/index pairs or int8 words via
+        ``shard_compressed_qmix``) instead of dense-shaped, so the CHOCO
+        exchange in ``depositum.step`` actually shrinks bytes on the wire.
+        """
         size, _n = self._check_plan(sched)
         spec_axis = self.axis_name
 
@@ -180,7 +190,23 @@ class ShardMapBackend:
 
             return jax.tree_util.tree_map(leaf, tree)
 
-        return ScheduleMixer(mix, sched)
+        wire = None
+        if wire_supported(sched):
+            def wire(tree, r):
+                rr = jnp.asarray(r, jnp.int32)
+
+                def leaf(x):
+                    spec = P(spec_axis)
+                    fn = shard_map(
+                        lambda blk: shard_compressed_qmix(sched, rr, blk,
+                                                          spec_axis, size),
+                        mesh=self.mesh, in_specs=(spec,), out_specs=spec,
+                    )
+                    return fn(x)
+
+                return jax.tree_util.tree_map(leaf, tree)
+
+        return ScheduleMixer(mix, sched, wire_fn=wire)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -213,7 +239,15 @@ class SweepBackend:
                          batch_axis=batch_axis, backend=self.inner)
 
 
-def suggest_backend_name(kind: str, n_clients: int, n_devices: int) -> str:
+#: Per-device bytes/round below which a comm round is latency-bound — the
+#: collective costs more in dispatch than it moves, and the single-process
+#: stacked-vmap simulation wins.  A deliberately conservative 4 KiB (a few
+#: packets): only *heavily* compressed payloads duck under it.
+LATENCY_BYTES_FLOOR = 4096
+
+
+def suggest_backend_name(kind: str, n_clients: int, n_devices: int, *,
+                         wire_bytes: float | None = None) -> str:
     """Pure decision rule for :func:`suggest_backend` (testable host-side).
 
     * circulant (incl. chebyshev-over-circulant) plans want the ppermute
@@ -222,18 +256,32 @@ def suggest_backend_name(kind: str, n_clients: int, n_devices: int) -> str:
       device count divides the client count;
     * anything else (single device, indivisible counts, identity) runs the
       stacked-vmap simulation.
+
+    ``wire_bytes`` — per-round bytes one device puts on the wire, computed
+    from the **compressed** payload
+    (:func:`repro.analysis.comm.device_wire_bytes`), not the dense leaf
+    size — refines the choice: a schedule whose compressed payload drops
+    below :data:`LATENCY_BYTES_FLOOR` makes every collective latency-bound,
+    so the simulation backend is preferred even where the dense payload
+    would have picked shard_map.  ``None`` (no spec / unknown sizes) keeps
+    the structural rule exactly.
     """
     if n_devices > 1 and n_clients > 1:
+        latency_bound = wire_bytes is not None and \
+            wire_bytes < LATENCY_BYTES_FLOOR
         if kind == "circulant":
-            return "shard_map" if n_devices == n_clients else "stacked-vmap"
-        if kind in ("dense", "complete") and n_clients % n_devices == 0:
+            if n_devices == n_clients and not latency_bound:
+                return "shard_map"
+            return "stacked-vmap"
+        if kind in ("dense", "complete") and n_clients % n_devices == 0 \
+                and not latency_bound:
             return "shard_map"
     return "stacked-vmap"
 
 
 def suggest_backend(plan_or_schedule, n_clients: int, *,
-                    devices=None, axis_name: str = "clients"
-                    ) -> ExecutionBackend:
+                    devices=None, axis_name: str = "clients",
+                    param_dim: int | None = None) -> ExecutionBackend:
     """Pick the execution backend from the plan's sparsity and the host.
 
     The last PR 2 follow-up: callers (``FederatedTrainer`` by default) no
@@ -242,10 +290,24 @@ def suggest_backend(plan_or_schedule, n_clients: int, *,
     all_gather/pmean path when the device count divides ``n_clients``, and
     everything else falls back to the stacked-vmap simulation (always
     correct, single-device friendly).
+
+    ``param_dim`` (flattened per-client parameter count) enables the
+    payload-aware refinement: for schedules carrying a
+    :class:`~repro.core.compression.CompressionSpec`, the per-device
+    bytes/round of the *compressed* payload decide whether the collective
+    is worth dispatching at all (see :func:`suggest_backend_name`).
     """
     devices = list(devices) if devices is not None else jax.devices()
+    wire_bytes = None
+    if param_dim is not None and isinstance(plan_or_schedule, MixSchedule) \
+            and plan_or_schedule.compress is not None \
+            and not plan_or_schedule.is_stacked:
+        from repro.analysis.comm import device_wire_bytes
+
+        wire_bytes = device_wire_bytes(plan_or_schedule, param_dim,
+                                       n_clients, len(devices))
     name = suggest_backend_name(_plan_kind(plan_or_schedule), n_clients,
-                                len(devices))
+                                len(devices), wire_bytes=wire_bytes)
     if name == "shard_map":
         mesh = jax.make_mesh((len(devices),), (axis_name,), devices=devices)
         return ShardMapBackend(mesh=mesh, axis_name=axis_name,

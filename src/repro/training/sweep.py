@@ -63,6 +63,7 @@ from repro.core import (
     local_then_comm_round,
     n_sweep,
 )
+from repro.core.compression import active_compression
 from repro.core.hyper import stack_hypers
 from repro.core.mixing import MixPlan, validate_plan
 from repro.core.schedule import MixSchedule, validate_schedule
@@ -227,7 +228,11 @@ def _scanned_run(grad_fn, config, n_clients, metrics_fn, mixer_factory):
 
     def run_one(hyper, plan, params, batches):
         mixer = mixer_factory(plan)
-        state0 = dep_init(params, n_clients)
+        # schedules carrying an active CompressionSpec need the CHOCO
+        # error-feedback memory on the state; the spec arrives per sweep
+        # point (its kind is static, so this branch is trace-stable)
+        state0 = dep_init(params, n_clients,
+                          compress=active_compression(plan))
 
         def body(state, batches_r):
             state, _ = local_then_comm_round(
@@ -240,9 +245,15 @@ def _scanned_run(grad_fn, config, n_clients, metrics_fn, mixer_factory):
     return run_one
 
 
-def sweep_init(params0: PyTree, n_clients: int, n: int) -> DepositumState:
-    """Initial sweep state: identical per-config, leaves (S, n_clients, ...)."""
-    state0 = dep_init(params0, n_clients)
+def sweep_init(params0: PyTree, n_clients: int, n: int,
+               compress: Any = None) -> DepositumState:
+    """Initial sweep state: identical per-config, leaves (S, n_clients, ...).
+
+    ``compress`` (a CompressionSpec or a schedule carrying one) allocates
+    the CHOCO error-feedback memory on every sweep point, matching what
+    :func:`sweep_run` builds internally — pass the swept schedule here
+    when driving :func:`make_sweep_round` by hand."""
+    state0 = dep_init(params0, n_clients, compress=compress)
     return jax.tree_util.tree_map(
         lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), state0
     )

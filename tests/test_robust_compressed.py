@@ -113,6 +113,41 @@ def test_compressed_consensus_converges():
     np.testing.assert_allclose(np.asarray(jnp.mean(x, 0)), target, atol=1e-2)
 
 
+def test_compressed_round_equals_plan_leaf_path():
+    """Old-vs-new: the deprecated ``compressed_gossip_round`` and the
+    plan-leaf CHOCO exchange (``choco_mix`` with the incremental running
+    mix ``s``) follow the same trajectory — bit-exact on round one (zero
+    memory), fp-tolerance after (fresh ``W @ xhat`` vs accumulated s)."""
+    from repro.core import (
+        CompressionSpec,
+        MixPlan,
+        apply_mix,
+        choco_mix,
+        comm_memory,
+    )
+
+    n, d, k = 8, 64, 8
+    W = mixing_matrix("ring", n)
+    x0 = jnp.asarray(np.random.default_rng(2).standard_normal((n, d)),
+                     jnp.float32)
+    spec = CompressionSpec.topk(k / d, ef_step=0.3)
+    plan = MixPlan.dense(jnp.asarray(W, jnp.float32))
+    mixfn = lambda t: apply_mix(plan, t)  # noqa: E731
+
+    x_old, st = x0, init_compressed(x0)
+    x_new, mem = x0, comm_memory(x0)
+    for i in range(50):
+        x_old, st, _ = compressed_gossip_round(x_old, st, W, k, step=0.3)
+        x_new, mem = choco_mix(spec, mixfn, x_new, mem)
+        if i == 0:
+            np.testing.assert_array_equal(np.asarray(x_old),
+                                          np.asarray(x_new))
+    np.testing.assert_allclose(np.asarray(x_old), np.asarray(x_new),
+                               rtol=1e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st.xhat), np.asarray(mem.xhat),
+                               rtol=1e-5, atol=2e-5)
+
+
 def test_compression_memory_matters():
     """Naive sparsified gossip (mix C(x) directly, no xhat memory) loses the
     untransmitted mass and cannot reach the true mean."""
