@@ -29,7 +29,9 @@ from repro.core import (
     stack_mixplans,
     stationarity_metrics,
 )
+from repro.core.schedule import MixSchedule
 from repro.data import make_classification
+from repro.obs.metrics import round_values
 from repro.training.backends import ExecutionBackend
 from repro.training.sweep import sweep_run
 
@@ -102,7 +104,8 @@ class ExperimentConfig:
 
 
 def run_depositum(cfg: ExperimentConfig, collect_metrics: bool = True,
-                  metrics_every: int | None = None):
+                  metrics_every: int | None = None, telemetry=None,
+                  log_every: int = 1):
     """Returns dict of curves: loss, accuracy, stationarity terms, wall_s.
 
     Sequential (one-config) path: a fresh ``jit`` per config with the
@@ -110,6 +113,11 @@ def run_depositum(cfg: ExperimentConfig, collect_metrics: bool = True,
     ``--sequential`` fallback and as the wall-clock baseline.
     ``metrics_every=1`` evaluates metrics every round (matching the sweep
     engine's per-round metric cadence for fair timing comparisons).
+
+    ``telemetry`` (a :class:`repro.obs.Telemetry`) additionally records the
+    *in-loop* theory streams on-device every ``log_every`` rounds (no host
+    sync; the exact-gradient eval metrics above keep their own cadence) and
+    merges them into the curves as ``recorded_<name>`` lists.
     """
     ds = make_classification(
         n_samples=cfg.n_samples, n_features=cfg.n_features,
@@ -151,6 +159,22 @@ def run_depositum(cfg: ExperimentConfig, collect_metrics: bool = True,
     metrics_fn = jax.jit(functools.partial(stationarity_metrics,
                                            grad_fns=grad_fns, config=dep))
 
+    record_fn = None
+    carry = None
+    if telemetry is not None:
+        # the recorder reads the post-round state in its own jitted step, so
+        # the round program (and the trajectory) is exactly the metrics-off
+        # one; log_every rides as a traced operand
+        sched = MixSchedule.constant(MixPlan.dense(jnp.asarray(W)))
+
+        @jax.jit
+        def record_fn(state, carry, log_every_op):
+            vals = round_values(state, dep, mixer=sched, n=cfg.n_clients)
+            r = (state.t - 1) // dep.comm_period
+            return telemetry.record_and_emit(carry, vals, r, log_every_op)
+
+        carry = telemetry.init_carry()
+
     rng = np.random.default_rng(cfg.seed + 7)
     curves: dict[str, list] = {k: [] for k in
                                ("round", "loss", "accuracy", "prox_grad_sq",
@@ -162,6 +186,8 @@ def run_depositum(cfg: ExperimentConfig, collect_metrics: bool = True,
         bx, by = ds.stacked_batches(rng, cfg.batch, dep.comm_period)
         state, _ = rnd(state, batches={"x": jnp.asarray(bx),
                                        "y": jnp.asarray(by)})
+        if record_fn is not None:
+            carry = record_fn(state, carry, log_every)
         if collect_metrics and (r % every == 0 or r == cfg.rounds - 1):
             m = metrics_fn(state)
             pbar = jax.tree_util.tree_map(lambda v: jnp.mean(v, 0), state.x)
@@ -177,6 +203,13 @@ def run_depositum(cfg: ExperimentConfig, collect_metrics: bool = True,
     curves["wall_s"] = time.perf_counter() - t0
     curves["iters"] = cfg.rounds * dep.comm_period
     curves["spectral_lambda"] = float(spectral_lambda(W))
+    if telemetry is not None:
+        telemetry.sync()
+        sink = telemetry.memory_sink
+        if sink is not None:
+            curves["recorded_round"] = sink.rounds(0)
+            for name in telemetry.spec.names:
+                curves[f"recorded_{name}"] = sink.stream(name, 0)
     return curves
 
 
@@ -199,12 +232,17 @@ def _static_key(cfg: ExperimentConfig):
 
 def _run_sweep_group(cfgs: list[ExperimentConfig], group_id: int,
                      collect_metrics: bool = True,
-                     backend: ExecutionBackend | None = None) -> list[dict]:
+                     backend: ExecutionBackend | None = None,
+                     telemetry=None, log_every: int = 1) -> list[dict]:
     """Run one static-config group through the sweep engine.
 
     Configs may differ in hyperparameters AND topology: both are traced
     operands (stacked Hyper axis + stacked dense-W MixPlan axis), so the
     group still compiles to one program.
+
+    ``telemetry`` records the in-loop theory streams per config inside the
+    compiled scan (``config`` tags follow group order); each returned row
+    gains ``recorded_<name>`` lists from its config's event stream.
     """
     cfg = cfgs[0]
     dep = cfg.depositum
@@ -267,9 +305,12 @@ def _run_sweep_group(cfgs: list[ExperimentConfig], group_id: int,
         params0, grad_fn, dep, plan, hypers, batches,
         n_clients=cfg.n_clients,
         metrics_fn=metrics_fn if collect_metrics else None,
-        backend=backend,
+        backend=backend, telemetry=telemetry, log_every=log_every,
     )
-    outs = jax.tree_util.tree_map(np.asarray, outs)  # block + to host
+    if collect_metrics:
+        outs = jax.tree_util.tree_map(np.asarray, outs)  # block + to host
+    else:
+        jax.block_until_ready(_final)
     wall = time.perf_counter() - t0
 
     keys = ("loss", "accuracy", "prox_grad_sq", "consensus_x", "consensus_y",
@@ -288,12 +329,21 @@ def _run_sweep_group(cfgs: list[ExperimentConfig], group_id: int,
         curves["sweep_group_size"] = len(cfgs)
         curves["sweep_group_wall_s"] = wall
         rows.append(curves)
+    if telemetry is not None:
+        telemetry.sync()
+        sink = telemetry.memory_sink
+        if sink is not None:
+            for s, curves in enumerate(rows):
+                curves["recorded_round"] = sink.rounds(s)
+                for name in telemetry.spec.names:
+                    curves[f"recorded_{name}"] = sink.stream(name, s)
     return rows
 
 
 def run_depositum_grid(cfgs: list[ExperimentConfig],
                        collect_metrics: bool = True,
-                       backend: ExecutionBackend | None = None) -> list[dict]:
+                       backend: ExecutionBackend | None = None,
+                       telemetry=None, log_every: int = 1) -> list[dict]:
     """Run a grid of experiments through the sweep engine.
 
     Configs are grouped by static structure (model/shape/momentum kind/prox
@@ -308,11 +358,18 @@ def run_depositum_grid(cfgs: list[ExperimentConfig],
     groups: dict[tuple, list[int]] = {}
     for i, cfg in enumerate(cfgs):
         groups.setdefault(_static_key(cfg), []).append(i)
+    if telemetry is not None and len(groups) > 1:
+        # config tags are per compiled program; one recorder cannot keep
+        # two groups' streams apart
+        raise ValueError(
+            f"telemetry needs a single static-config group, got "
+            f"{len(groups)}; run groups separately with fresh recorders")
 
     out: list[dict | None] = [None] * len(cfgs)
     for gid, idxs in enumerate(groups.values()):
         rows = _run_sweep_group([cfgs[i] for i in idxs], gid, collect_metrics,
-                                backend=backend)
+                                backend=backend, telemetry=telemetry,
+                                log_every=log_every)
         for i, row in zip(idxs, rows):
             out[i] = row
     return out

@@ -16,12 +16,10 @@ into ``BENCH_sweep.json`` under ``kernel_fused_sweep``.
 """
 from __future__ import annotations
 
-import time
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
 
+from repro.obs.trace import Timing, time_fn
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.prox.kernel import (
@@ -34,27 +32,9 @@ from repro.kernels.prox.kernel import (
 from repro.kernels.prox.ref import fused_update_ref, prox_l1_ref
 
 
-class Timing(NamedTuple):
-    """Per-iteration wall times in microseconds."""
-
-    blocked_us: float   # block_until_ready every iteration — the honest one
-    dispatch_us: float  # issue-only loop, one final block (async queue cost)
-
-
-def _time(fn, *args, iters=20, warmup=3) -> Timing:
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    blocked = (time.perf_counter() - t0) / iters * 1e6
-    t0 = time.perf_counter()
-    out = None
-    for _ in range(iters):
-        out = fn(*args)
-    dispatch = (time.perf_counter() - t0) / iters * 1e6
-    jax.block_until_ready(out)  # drain before the next benchmark starts
-    return Timing(blocked, dispatch)
+# Timing / the blocked-vs-dispatch measurement now live in
+# repro.obs.trace (time_fn); re-exported here for back-compat.
+_time = time_fn
 
 
 def fused_sweep_section(quick: bool = True) -> dict:

@@ -1,0 +1,150 @@
+"""Telemetry overhead: metrics-on vs metrics-off round time, per backend.
+
+Two execution paths, each timed with the recorder attached and detached:
+
+* ``stacked_vmap`` — one config's jitted round (the ``FederatedTrainer``
+  shape): ``local_then_comm_round`` alone vs the same round plus
+  ``record_and_emit`` (ring-buffer write + unconditional io_callback).
+* ``sweep`` — the sweep engine's whole-run scan over rounds, vmapped over
+  S configs, with the telemetry carry threaded through the scan.
+
+The telemetry-on sweep run also doubles as the JSONL end-to-end check: it
+writes every config's event stream to ``experiments/obs_events.jsonl``,
+validates the schema, and asserts the streams carry the theory metrics
+(prox-gradient norm, consensus error, tracking error, bytes-on-wire) for
+every logged round.  ``benchmarks/run.py`` merges :func:`section` into
+``BENCH_sweep.json`` under ``obs_overhead``; diff snapshots with
+``benchmarks/perf_diff.py``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DepositumConfig, MixPlan, init as dep_init
+from repro.core.hyper import hyper_grid
+from repro.core.schedule import MixSchedule
+from repro.obs import JsonlSink, MemorySink, MetricSpec, Telemetry
+from repro.obs.metrics import round_values
+from repro.obs.record import TelemetryCarry
+from repro.obs.sinks import validate_jsonl
+from repro.obs.trace import time_fn
+from repro.training.sweep import _scanned_run
+from repro.training.backends import StackedVmapBackend
+from repro.core.depositum import local_then_comm_round
+
+
+def _problem(quick: bool):
+    n, d = (4, 256) if quick else (8, 4096)
+    T0, rounds = 2, (6 if quick else 20)
+    key = jax.random.PRNGKey(0)
+    A = jax.random.normal(key, (n, 16, d)) * 0.3
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n, 16))
+
+    def grad_fn(x, batch):
+        def one(xi, Ai, bi):
+            r = Ai @ xi["w"] - bi
+            return {"w": 2.0 * Ai.T @ r / Ai.shape[0]}
+        return jax.vmap(one)(x, A, b), {}
+
+    cfg = DepositumConfig(alpha=0.05, comm_period=T0, prox_name="l1",
+                          prox_kwargs={"lam": 1e-4})
+    W = jnp.full((n, n), 1.0 / n)
+    sched = MixSchedule.constant(MixPlan.dense(W))
+    params0 = {"w": jnp.zeros((d,))}
+    batches = jnp.zeros((rounds, T0, n, 1))
+    return n, d, rounds, cfg, sched, grad_fn, params0, batches
+
+
+def _pair(off_us: float, on_us: float) -> dict:
+    return {"off_us_per_round": round(off_us, 1),
+            "on_us_per_round": round(on_us, 1),
+            "overhead_us_per_round": round(on_us - off_us, 1),
+            "overhead_frac": round(on_us / max(off_us, 1e-9) - 1.0, 4)}
+
+
+def section(quick: bool = True, out_dir: str = "experiments") -> dict:
+    n, d, rounds, cfg, sched, grad_fn, params0, batches = _problem(quick)
+    iters = 3 if quick else 10
+    backend = StackedVmapBackend()
+    mixer = backend.mixer_for(sched)
+    sec: dict = {"rounds": rounds, "n_clients": n, "param_dim": d,
+                 "log_every": 1, "quick": bool(quick), "backends": {}}
+
+    # -- stacked_vmap: one config's round, trainer-shaped ------------------
+    state0 = dep_init(params0, n)
+    one_batch = batches[0]
+
+    round_off = jax.jit(lambda s, b: local_then_comm_round(
+        s, b, grad_fn, cfg, mixer))
+    tel1 = Telemetry(MetricSpec(buffer=rounds + 1), [MemorySink()])
+
+    def round_on(s, b, carry, log_every):
+        s, aux = local_then_comm_round(s, b, grad_fn, cfg, mixer)
+        vals = round_values(s, cfg, mixer=sched, aux=aux, n=n)
+        r = (s.t - 1) // cfg.comm_period
+        return s, tel1.record_and_emit(carry, vals, r, log_every)
+
+    round_on = jax.jit(round_on)
+    carry0 = tel1.init_carry()
+    le = jnp.asarray(1, jnp.int32)
+    t_off = time_fn(round_off, state0, one_batch, iters=iters)
+    t_on = time_fn(lambda s, b: round_on(s, b, carry0, le),
+                   state0, one_batch, iters=iters)
+    tel1.sync()
+    sec["backends"]["stacked_vmap"] = _pair(t_off.blocked_us, t_on.blocked_us)
+
+    # -- sweep engine: whole grid, telemetry carry in the scan -------------
+    hypers = hyper_grid(alpha=[0.03, 0.05, 0.08])
+    S = 3
+    os.makedirs(out_dir, exist_ok=True)
+    jsonl_path = os.path.join(out_dir, "obs_events.jsonl")
+    if os.path.exists(jsonl_path):
+        os.remove(jsonl_path)
+    spec = MetricSpec(buffer=rounds + 1)
+    tel = Telemetry(spec, [JsonlSink(jsonl_path), MemorySink()])
+
+    run_off = _scanned_run(grad_fn, cfg, n, None, backend.mixer_for)
+    run_on = _scanned_run(grad_fn, cfg, n, None, backend.mixer_for, tel)
+    runner_off = jax.jit(jax.vmap(run_off, in_axes=(0, None, None, None)))
+    runner_on = jax.jit(jax.vmap(run_on,
+                                 in_axes=(0, None, None, None, 0, None)))
+    tags = jnp.arange(S, dtype=jnp.int32)
+
+    t_off = time_fn(lambda: runner_off(hypers, sched, params0, batches),
+                    iters=iters)
+    t_on = time_fn(
+        lambda: runner_on(hypers, sched, params0, batches, tags, le),
+        iters=iters)
+    tel.sync()
+    sec["backends"]["sweep"] = _pair(t_off.blocked_us / rounds,
+                                     t_on.blocked_us / rounds)
+    sec["backends"]["sweep"]["grid_points"] = S
+
+    # -- end-to-end stream contract on the emitted JSONL -------------------
+    n_events = validate_jsonl(jsonl_path, spec.names)
+    sink = tel.memory_sink
+    needed = ("prox_grad_sq", "consensus_x", "track_err", "wire_bytes")
+    for s in range(S):
+        streams = {name: sink.stream(name, s) for name in needed}
+        logged = sink.rounds(s)
+        assert set(logged) >= {1, rounds}, (s, logged)
+        for name, vals in streams.items():
+            assert len(vals) == len(logged), (s, name, vals)
+            assert all(v == v for v in vals[-1:]), (s, name)  # finite tail
+    sec["jsonl_events"] = n_events
+    sec["jsonl_path"] = jsonl_path
+    return sec
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(section(quick=True), indent=2))

@@ -9,7 +9,10 @@ numbers ``kernel_bench._time`` now reports; blocked is the honest one).
 When both carry a ``comm_frontier`` section the compression frontier is
 diffed too: sweep/sequential walls plus bytes-on-wire and final loss per
 compressor point (so a payload-accounting change shows up as a bytes
-diff, a numerics change as a loss diff).
+diff, a numerics change as a loss diff).  An ``obs_overhead`` section in
+both snapshots diffs the telemetry cost per backend (metrics-on vs
+metrics-off round time) — a recorder change that slows the hot loop
+shows up here.
 """
 from __future__ import annotations
 
@@ -69,6 +72,26 @@ def diff_comm_section(a: dict, b: dict, lines: list) -> str:
     return "\n".join(lines)
 
 
+def diff_obs_section(a: dict, b: dict, lines: list) -> str:
+    """Diff ``obs_overhead`` sections of two BENCH_sweep snapshots."""
+    oa, ob = a["obs_overhead"], b["obs_overhead"]
+    bka, bkb = oa.get("backends", {}), ob.get("backends", {})
+    for backend in sorted(set(bka) | set(bkb)):
+        ra, rb = bka.get(backend, {}), bkb.get(backend, {})
+        for key in ("off_us_per_round", "on_us_per_round",
+                    "overhead_us_per_round", "overhead_frac"):
+            va, vb = ra.get(key, 0), rb.get(key, 0)
+            ratio = (va / vb) if vb else float("inf")
+            lines.append(f"{backend}/{key:30s} {fmt(va):>10s} -> "
+                         f"{fmt(vb):>10s}   ({ratio:.2f}x)")
+    for meta in ("rounds", "n_clients", "param_dim", "log_every"):
+        if oa.get(meta) != ob.get(meta):
+            lines.append(f"WARNING: {meta} differs "
+                         f"({oa.get(meta)} -> {ob.get(meta)}) — "
+                         "overheads not comparable")
+    return "\n".join(lines)
+
+
 def diff(a_path: str, b_path: str) -> str:
     a, b = load(a_path), load(b_path)
     lines = [f"baseline:  {a_path}", f"variant:   {b_path}", ""]
@@ -78,6 +101,9 @@ def diff(a_path: str, b_path: str) -> str:
         lines = [""]
     if "comm_frontier" in a and "comm_frontier" in b:
         out.append(diff_comm_section(a, b, lines))
+        lines = [""]
+    if "obs_overhead" in a and "obs_overhead" in b:
+        out.append(diff_obs_section(a, b, lines))
         lines = [""]
     if out:
         return "\n".join(out)

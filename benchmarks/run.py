@@ -224,6 +224,18 @@ def main() -> None:
             f"roofline {sec['roofline_fraction']:.4f} ({sec['backend']})")
         print(lines[-1], flush=True)
 
+    if wanted("obs_overhead"):
+        from benchmarks import obs_overhead as m
+        sec = m.section(quick=args.quick, out_dir=args.out)
+        bench_sweep["obs_overhead"] = sec
+        for bk, row in sec["backends"].items():
+            lines.append(
+                f"obs/{bk},{row['on_us_per_round']:.1f},"
+                f"telemetry +{row['overhead_us_per_round']:.1f}us/round "
+                f"({row['overhead_frac'] * 100:.1f}% vs off, "
+                f"{sec['jsonl_events']} events)")
+            print(lines[-1], flush=True)
+
     with open(os.path.join(args.out, "summary.csv"), "w") as f:
         f.write("\n".join(lines) + "\n")
     print(f"\nwrote {args.out}/summary.csv")
@@ -251,6 +263,13 @@ def main() -> None:
         assert "kernel_fused_sweep" in bench_sweep, \
             "kernel_bench ran but BENCH_sweep.json gained no " \
             "kernel_fused_sweep section"
+    if wanted("obs_overhead") and args.quick:
+        # CI contract: the obs job's quick run must record the telemetry
+        # overhead section (both backends, JSONL events validated)
+        assert "obs_overhead" in bench_sweep, \
+            "obs_overhead ran but BENCH_sweep.json gained no " \
+            "obs_overhead section"
+        assert bench_sweep["obs_overhead"]["jsonl_events"] > 0
 
     if bench_sweep:  # at least one ratio measured
         bench_path = os.path.join(_ROOT, "BENCH_sweep.json")

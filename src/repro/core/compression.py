@@ -64,6 +64,8 @@ from typing import Any, NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.obs.trace import annotate
+
 PyTree = Any
 
 _KINDS = ("none", "topk", "randk", "qsgd", "mixed")
@@ -419,22 +421,32 @@ def pack_payload(spec: CompressionSpec, flat: jnp.ndarray) -> tuple:
     """
     mode = wire_mode(spec)
     if mode == "sparse":
-        k = min(spec.wire_k, flat.shape[-1])
-        _, idx = jax.lax.top_k(jnp.abs(flat), k)
-        vals = jnp.take_along_axis(flat, idx, axis=-1)
-        return vals, idx.astype(jnp.int32)
+        with annotate("compress_pack"):
+            return _pack_sparse(spec, flat)
     if mode == "quant":
-        # same inf-norm scale as ``_qsgd_rows``: already-quantised rows
-        # carry integer levels w.r.t. ``max|q|``, so the round() is exact
-        s = _qsgd_levels(spec.bits)
-        norm = jnp.max(jnp.abs(flat.astype(jnp.float32)),
-                       axis=-1, keepdims=True)
-        words = jnp.clip(
-            jnp.round(flat.astype(jnp.float32)
-                      / jnp.maximum(norm, 1e-12) * s), -127, 127)
-        return words.astype(jnp.int8), norm
+        with annotate("compress_pack"):
+            return _pack_quant(spec, flat)
     raise ValueError(f"spec {spec.kind!r} (wire_k={spec.wire_k}) has no "
                      "wire payload; use the dense collective")
+
+
+def _pack_sparse(spec: CompressionSpec, flat: jnp.ndarray) -> tuple:
+    k = min(spec.wire_k, flat.shape[-1])
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = jnp.take_along_axis(flat, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)
+
+
+def _pack_quant(spec: CompressionSpec, flat: jnp.ndarray) -> tuple:
+    # same inf-norm scale as ``_qsgd_rows``: already-quantised rows
+    # carry integer levels w.r.t. ``max|q|``, so the round() is exact
+    s = _qsgd_levels(spec.bits)
+    norm = jnp.max(jnp.abs(flat.astype(jnp.float32)),
+                   axis=-1, keepdims=True)
+    words = jnp.clip(
+        jnp.round(flat.astype(jnp.float32)
+                  / jnp.maximum(norm, 1e-12) * s), -127, 127)
+    return words.astype(jnp.int8), norm
 
 
 def unpack_payload(spec: CompressionSpec, payload: tuple, d: int,
@@ -442,13 +454,15 @@ def unpack_payload(spec: CompressionSpec, payload: tuple, d: int,
     """Invert :func:`pack_payload` back to dense-shaped ``(rows, d)``."""
     mode = wire_mode(spec)
     if mode == "sparse":
-        vals, idx = payload
-        rows = vals.shape[0]
-        flat = jnp.zeros((rows, d), dtype)
-        return flat.at[jnp.arange(rows)[:, None], idx].set(
-            vals.astype(dtype))
+        with annotate("compress_unpack"):
+            vals, idx = payload
+            rows = vals.shape[0]
+            flat = jnp.zeros((rows, d), dtype)
+            return flat.at[jnp.arange(rows)[:, None], idx].set(
+                vals.astype(dtype))
     if mode == "quant":
-        words, norm = payload
-        s = _qsgd_levels(spec.bits)
-        return (words.astype(jnp.float32) * norm / s).astype(dtype)
+        with annotate("compress_unpack"):
+            words, norm = payload
+            s = _qsgd_levels(spec.bits)
+            return (words.astype(jnp.float32) * norm / s).astype(dtype)
     raise ValueError(f"spec {spec.kind!r} has no wire payload")

@@ -53,6 +53,7 @@ from repro.core.schedule import (
     schedule_round_mask,
 )
 from repro.core.momentum import MomentumKind, momentum_update
+from repro.obs.trace import annotate
 from repro.core.prox import (
     ProxOperator,
     family_params,
@@ -65,6 +66,14 @@ from repro.core.prox import (
 )
 
 PyTree = Any
+
+
+def _scoped(name, fn):
+    """fn under a profiler/named scope (trace-time metadata only)."""
+    def wrapped(*args):
+        with annotate(name):
+            return fn(*args)
+    return wrapped
 
 
 _FUSED_MODES = ("auto", "require", "off")
@@ -313,6 +322,9 @@ def step(
             key_x, key_y = comm_round_keys(comm_spec, r)
     else:
         mixer, _plan = resolve_mixer(mixer)
+    mixer = _scoped("gossip", mixer)
+    if qmix is not None:
+        qmix = _scoped("gossip", qmix)
     if hyper is None:
         config.validate()
         hp = config.hyper()
@@ -359,17 +371,18 @@ def step(
             kind=config.prox_name)
         mu_next = state.mu
     else:
-        # (1) momentum from the tracking variable
-        nu_next, mu_next = momentum_update(
-            config.momentum, hp.gamma, state.nu, state.mu, state.y
-        )
+        with annotate("local_step"):
+            # (1) momentum from the tracking variable
+            nu_next, mu_next = momentum_update(
+                config.momentum, hp.gamma, state.nu, state.mu, state.y
+            )
 
-        # (2) proximal descent + (optional) gossip
-        x_half = prox_apply(
-            config.prox_name,
-            tm(lambda p, v: p - c(hp.alpha, p) * v, state.x, nu_next),
-            hp.alpha, lam=hp.lam, theta=hp.theta,
-        )
+            # (2) proximal descent + (optional) gossip
+            x_half = prox_apply(
+                config.prox_name,
+                tm(lambda p, v: p - c(hp.alpha, p) * v, state.x, nu_next),
+                hp.alpha, lam=hp.lam, theta=hp.theta,
+            )
 
     def _gated_choco(half, mem, key):
         """CHOCO exchange honoring the comm gate: returns (out, new_mem).
@@ -412,10 +425,11 @@ def step(
         y_half, g_next = fused_tracking(
             state.y, g_next, state.g, hp_vec, kernel_mask)
     else:
-        y_half = tm(
-            lambda y, gn, go: y + c(hp.beta, y) * (gn - go),
-            state.y, g_next, state.g,
-        )
+        with annotate("local_step"):
+            y_half = tm(
+                lambda y, gn, go: y + c(hp.beta, y) * (gn - go),
+                state.y, g_next, state.g,
+            )
     if comm_spec is None:
         if isinstance(is_comm_step, bool):
             y_next = mixer(y_half) if is_comm_step else y_half

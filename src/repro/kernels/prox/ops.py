@@ -25,6 +25,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.obs.trace import annotate
 from repro.kernels.prox.kernel import (
     fused_tracking_sweep_pallas,
     fused_update_pallas,
@@ -211,15 +212,17 @@ def fused_local_update(x_tree, y_tree, nu_tree, hp_vec, mask=None, *,
     sweep-major kernel whose grid axis 0 is the config axis.
     """
     f = _make_fused_local_update(kind, mask is not None)
-    if mask is None:
-        return f(x_tree, y_tree, nu_tree, hp_vec)
-    return f(x_tree, y_tree, nu_tree, hp_vec, mask)
+    with annotate("fused_kernel"):
+        if mask is None:
+            return f(x_tree, y_tree, nu_tree, hp_vec)
+        return f(x_tree, y_tree, nu_tree, hp_vec, mask)
 
 
 def fused_tracking(y_tree, g_new_tree, g_old_tree, hp_vec, mask=None):
     """Tracking axpy ``y' = y + beta (g_new - g_old)`` (+ in-kernel freeze
     when ``mask`` given), sweep-major under vmap.  Returns (y', g_kept)."""
     f = _make_fused_tracking(mask is not None)
-    if mask is None:
-        return f(y_tree, g_new_tree, g_old_tree, hp_vec)
-    return f(y_tree, g_new_tree, g_old_tree, hp_vec, mask)
+    with annotate("fused_kernel"):
+        if mask is None:
+            return f(y_tree, g_new_tree, g_old_tree, hp_vec)
+        return f(y_tree, g_new_tree, g_old_tree, hp_vec, mask)

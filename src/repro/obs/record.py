@@ -1,0 +1,212 @@
+"""The scan-carried telemetry recorder.
+
+The recording problem: the round program is a compiled ``lax.scan`` (one
+program for a whole sweep grid), so per-round metrics must be *written
+on device* — a host read per round would sync the async dispatch queue
+and serialise the pipeline.  The solution here:
+
+* :class:`TelemetryCarry` — a fixed-shape ring buffer (``(B, K)`` values,
+  ``(B,)`` round numbers, a write counter) that **rides the scan carry**
+  next to the training state.  Recording a round is two masked
+  ``.at[idx].set`` writes; nothing leaves the device.
+* :meth:`Telemetry.record` — packs a metric dict into the buffer when the
+  round hits the cadence.  ``log_every`` is a **traced operand**, not
+  Python structure: changing the cadence re-runs the same compiled
+  program (pinned by a trace-count test).
+* :meth:`Telemetry.emit` — a ``jax.experimental.io_callback`` that hands
+  the buffer to the host.  The callback is *unconditional* (a
+  ``lax.cond``-gated io_callback is unsupported under vmap) and the host
+  side gates: it tracks how many rows per config it has already emitted
+  and writes only the new ones to the sinks.  Under the sweep engine's
+  ``vmap`` the callback fires once per config with unbatched buffers, so
+  a per-config integer ``tag`` operand identifies the stream — one
+  compiled program yields per-config event streams.
+
+Backend semantics:
+
+* **stacked-vmap / single runs** — ``tag=0``; one stream.
+* **sweep engine** — ``tag = jnp.arange(S)`` mapped with the grid; events
+  carry ``config=s``.
+* **shard_map** — metrics are computed on the global (sharded) state
+  *outside* the ``shard_map`` body, so jnp's client-axis reductions lower
+  to cross-shard collectives and the recorder remains a single host
+  writer; no per-shard files.
+
+Sinks (:mod:`repro.obs.sinks`) and the host gate are **mutable run-time
+state** of the ``Telemetry`` instance — swapping sinks never enters the
+trace.  Emission is asynchronous; call :meth:`Telemetry.sync` (an
+``effects_barrier``) before reading sinks.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+
+from repro.obs.metrics import MetricSpec
+from repro.obs.sinks import JsonlSink, MemorySink
+from repro.obs.trace import annotate
+
+
+class TelemetryCarry(NamedTuple):
+    """Device-side recording state; rides the training scan carry.
+
+    ``vals[i % B]`` holds the ``i``-th logged row (ring buffer), ``rounds``
+    its 1-based round number, ``count`` the total rows written.  All
+    leaves are arrays, so the carry vmaps over a sweep axis and shards
+    like any other state.
+    """
+
+    vals: jnp.ndarray    # (B, K) f32
+    rounds: jnp.ndarray  # (B,)  i32
+    count: jnp.ndarray   # ()    i32
+
+
+class Telemetry:
+    """Recorder: static :class:`MetricSpec` + mutable host sinks.
+
+    One instance per run *program*: the jitted round function closes over
+    the instance (its bound ``_host_emit`` is the io_callback target), so
+    replacing the **instance** retraces, while mutating ``.sinks`` or
+    passing different ``log_every`` / ``tag`` operands never does.
+    """
+
+    def __init__(self, spec: MetricSpec = MetricSpec(),
+                 sinks: Optional[Sequence[Any]] = None):
+        self.spec = spec
+        self.sinks = list(sinks) if sinks is not None else [MemorySink()]
+        self._emitted: dict = {}   # tag -> rows already written to sinks
+
+    # -- constructors -----------------------------------------------------
+    @classmethod
+    def memory(cls, spec: MetricSpec = MetricSpec()) -> "Telemetry":
+        return cls(spec, [MemorySink()])
+
+    @classmethod
+    def jsonl(cls, path: str, spec: MetricSpec = MetricSpec(),
+              keep_memory: bool = True) -> "Telemetry":
+        """JSONL event log at ``path`` (+ a MemorySink for programmatic
+        access unless ``keep_memory=False``)."""
+        sinks = [JsonlSink(path)]
+        if keep_memory:
+            sinks.append(MemorySink())
+        return cls(spec, sinks)
+
+    @property
+    def memory_sink(self) -> Optional[MemorySink]:
+        for s in self.sinks:
+            if isinstance(s, MemorySink):
+                return s
+        return None
+
+    # -- traced side ------------------------------------------------------
+    def init_carry(self) -> TelemetryCarry:
+        B, K = self.spec.buffer, self.spec.n_metrics
+        return TelemetryCarry(vals=jnp.zeros((B, K), jnp.float32),
+                              rounds=jnp.zeros((B,), jnp.int32),
+                              count=jnp.zeros((), jnp.int32))
+
+    def pack(self, values: dict) -> jnp.ndarray:
+        """One ``(K,)`` f32 row in ``spec.names`` order."""
+        missing = [n for n in self.spec.names if n not in values]
+        if missing:
+            raise KeyError(f"metric values missing {missing}; "
+                           f"spec wants {self.spec.names}")
+        return jnp.stack([jnp.asarray(values[n], jnp.float32)
+                          for n in self.spec.names])
+
+    def record(self, carry: TelemetryCarry, values: dict, r,
+               log_every, *, force=False) -> TelemetryCarry:
+        """Write round ``r`` (0-based) into the buffer iff it hits cadence.
+
+        ``log_every`` and ``force`` are traced operands — masked writes,
+        no ``lax.cond`` — so cadence changes cannot recompile.  ``force``
+        records regardless of cadence (the final round).
+        """
+        with annotate("telemetry"):
+            row = self.pack(values)
+            r = jnp.asarray(r, jnp.int32)
+            le = jnp.maximum(jnp.asarray(log_every, jnp.int32), 1)
+            write = jnp.logical_or((r + 1) % le == 0,
+                                   jnp.asarray(force, bool))
+            idx = carry.count % self.spec.buffer
+            old_row = jax.lax.dynamic_index_in_dim(
+                carry.vals, idx, keepdims=False)
+            vals = carry.vals.at[idx].set(jnp.where(write, row, old_row))
+            rounds = carry.rounds.at[idx].set(
+                jnp.where(write, r + 1, carry.rounds[idx]))
+            count = carry.count + write.astype(jnp.int32)
+            return TelemetryCarry(vals, rounds, count)
+
+    def emit(self, carry: TelemetryCarry, tag=0) -> None:
+        """Hand the buffer to the host sinks (async, unconditional).
+
+        Call once per round/scan step after :meth:`record`; the host gate
+        makes steps with no new rows free apart from the callback hop.
+        Under vmap, pass a per-config ``tag`` array so streams separate.
+        """
+        with annotate("telemetry"):
+            io_callback(self._host_emit, None, carry.vals, carry.rounds,
+                        carry.count, jnp.asarray(tag, jnp.int32),
+                        ordered=False)
+
+    def record_and_emit(self, carry: TelemetryCarry, values: dict, r,
+                        log_every, *, tag=0, force=False) -> TelemetryCarry:
+        carry = self.record(carry, values, r, log_every, force=force)
+        self.emit(carry, tag)
+        return carry
+
+    # -- host side --------------------------------------------------------
+    def _host_emit(self, vals, rounds, count, tag) -> None:
+        tag = int(tag)
+        count = int(count)
+        done = self._emitted.get(tag, 0)
+        if count <= done:
+            return
+        vals = np.asarray(vals)
+        rounds = np.asarray(rounds)
+        B = vals.shape[0]
+        start = max(done, count - B)  # older rows were overwritten
+        events = []
+        for i in range(start, count):
+            row = vals[i % B]
+            event = {"config": tag, "round": int(rounds[i % B])}
+            event.update((name, float(row[k]))
+                         for k, name in enumerate(self.spec.names))
+            events.append(event)
+        self._emitted[tag] = count
+        for sink in self.sinks:
+            sink.write(events)
+
+    def sync(self) -> None:
+        """Block until every pending emit has reached the sinks."""
+        jax.effects_barrier()
+
+    def close(self) -> None:
+        self.sync()
+        for sink in self.sinks:
+            sink.close()
+
+    def reset(self) -> None:
+        """Forget emission progress (new run reusing this instance)."""
+        self.sync()
+        self._emitted = {}
+
+    def events(self, config: int = 0) -> list:
+        """Events from the memory sink (after :meth:`sync`)."""
+        self.sync()
+        sink = self.memory_sink
+        if sink is None:
+            raise ValueError("no MemorySink attached")
+        return [e for e in sink.events if e["config"] == config]
+
+    def stream(self, name: str, config: int = 0) -> list:
+        """One metric's recorded trajectory, in emission order."""
+        self.sync()
+        sink = self.memory_sink
+        if sink is None:
+            raise ValueError("no MemorySink attached")
+        return sink.stream(name, config)

@@ -1,0 +1,147 @@
+"""Tracing and timing hooks: name the phases, time the rounds.
+
+Two cheap, always-available facilities plus one opt-in heavy one:
+
+* :func:`annotate` — a ``jax.named_scope`` + ``jax.profiler.
+  TraceAnnotation`` context used around the DEPOSITUM phases (local-step,
+  gossip collective, compression pack/unpack, fused-kernel launch), so
+  both HLO module names *and* profiler timelines show the algorithm's
+  structure.  Trace-time only — it emits no ops and cannot change
+  numerics or trigger retraces.
+* :class:`RoundTimer` / :func:`time_fn` — wall-clock timing that separates
+  **blocked** time (``block_until_ready`` per call — the honest number)
+  from **dispatch** time (issue-only — async queue cost).  ``Timing`` is
+  the canonical home of the tuple ``benchmarks/kernel_bench.py`` used to
+  own; kernel_bench now imports it from here.
+* :func:`profile_capture` — opt-in ``jax.profiler.trace`` capture around a
+  block, written to a TensorBoard-readable directory.  Gated by an
+  explicit flag (or ``REPRO_PROFILE_DIR``) because captures are large.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import time
+from typing import Callable, NamedTuple, Optional
+
+import jax
+
+#: DEPOSITUM phase names used by the in-tree annotations; one vocabulary
+#: so profiles from different backends line up.
+PHASES = ("local_step", "gossip", "compress_pack", "compress_unpack",
+          "fused_kernel", "telemetry")
+
+
+@contextlib.contextmanager
+def annotate(name: str):
+    """Name a code region for both HLO (named_scope) and profiler traces.
+
+    Safe inside jit/vmap/scan tracing: both underlying contexts are
+    metadata-only.  TraceAnnotation additionally labels host-side walls
+    when a profiler capture is active.
+    """
+    with jax.named_scope(name):
+        with jax.profiler.TraceAnnotation(name):
+            yield
+
+
+class Timing(NamedTuple):
+    """Per-iteration wall times in microseconds."""
+
+    blocked_us: float   # block_until_ready every iteration — the honest one
+    dispatch_us: float  # issue-only loop, one final block (async queue cost)
+
+
+def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3
+            ) -> Timing:
+    """Time ``fn(*args)``: blocked per-iteration, then dispatch-only.
+
+    The measurement previously private to ``benchmarks/kernel_bench._time``
+    — warm up, block every iteration for the honest wall time, then an
+    issue-only loop with a single trailing block for the async queue cost.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    blocked = (time.perf_counter() - t0) / iters * 1e6
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(iters):
+        out = fn(*args)
+    dispatch = (time.perf_counter() - t0) / iters * 1e6
+    jax.block_until_ready(out)  # drain before the next measurement starts
+    return Timing(blocked, dispatch)
+
+
+class RoundTimer:
+    """Accumulates blocked vs dispatch wall time across training rounds.
+
+    Usage inside a host round loop::
+
+        timer = RoundTimer()
+        for r in range(rounds):
+            with timer.round():
+                state, aux = round_fn(state, batches)   # dispatch
+            # ...anything else on the host...
+        timer.block_on(state)                           # drain once
+
+    ``round()`` times the dispatch of one round; :meth:`block_on` blocks
+    on a final value and attributes the wait to blocked time.  For
+    per-round blocked numbers (each round synced), pass ``blocking=True``
+    and the round's output to ``round(out=...)`` — that is what the
+    overhead benchmark does; training loops keep the async pipeline.
+    """
+
+    def __init__(self):
+        self.rounds = 0
+        self.dispatch_s = 0.0
+        self.blocked_s = 0.0
+
+    @contextlib.contextmanager
+    def round(self):
+        t0 = time.perf_counter()
+        yield
+        self.dispatch_s += time.perf_counter() - t0
+        self.rounds += 1
+
+    def block_on(self, value) -> None:
+        t0 = time.perf_counter()
+        jax.block_until_ready(value)
+        self.blocked_s += time.perf_counter() - t0
+
+    def timing(self) -> Timing:
+        """Mean per-round Timing; blocked = dispatch + wait, amortised."""
+        n = max(1, self.rounds)
+        dispatch = self.dispatch_s / n * 1e6
+        blocked = (self.dispatch_s + self.blocked_s) / n * 1e6
+        return Timing(blocked, dispatch)
+
+    def summary(self) -> dict:
+        t = self.timing()
+        return {"rounds": self.rounds,
+                "blocked_us_per_round": t.blocked_us,
+                "dispatch_us_per_round": t.dispatch_us}
+
+
+@contextlib.contextmanager
+def profile_capture(log_dir: Optional[str] = None, *,
+                    enabled: Optional[bool] = None):
+    """Opt-in ``jax.profiler.trace`` capture around a block.
+
+    Enabled when ``enabled=True``, or when ``enabled`` is None and the
+    ``REPRO_PROFILE_DIR`` env var is set (its value is the default
+    ``log_dir``).  Disabled, it is a no-op context — callers wrap their
+    run loop unconditionally and flip the flag.
+    """
+    env_dir = os.environ.get("REPRO_PROFILE_DIR")
+    if enabled is None:
+        enabled = env_dir is not None
+    if not enabled:
+        yield None
+        return
+    target = log_dir or env_dir or "profile"
+    os.makedirs(target, exist_ok=True)
+    with jax.profiler.trace(target):
+        yield target

@@ -231,12 +231,14 @@ class SweepBackend:
         return self.inner.mixer_for(plan)
 
     def run(self, params0, grad_fn, config, mixer, hypers, batches, *,
-            n_clients: int, metrics_fn=None, batch_axis=None):
+            n_clients: int, metrics_fn=None, batch_axis=None,
+            telemetry=None, log_every: int = 1):
         from repro.training.sweep import sweep_run
 
         return sweep_run(params0, grad_fn, config, mixer, hypers, batches,
                          n_clients=n_clients, metrics_fn=metrics_fn,
-                         batch_axis=batch_axis, backend=self.inner)
+                         batch_axis=batch_axis, backend=self.inner,
+                         telemetry=telemetry, log_every=log_every)
 
 
 #: Per-device bytes/round below which a comm round is latency-bound — the

@@ -217,32 +217,70 @@ def _metrics_caller(metrics_fn):
     return lambda state, hyper, plan: metrics_fn(state, hyper)
 
 
-def _scanned_run(grad_fn, config, n_clients, metrics_fn, mixer_factory):
+def _scanned_run(grad_fn, config, n_clients, metrics_fn, mixer_factory,
+                 telemetry=None):
     """One sweep point's whole run as a scan over rounds:
     (hyper, plan, params, batches) -> (final_state, per_round_outputs).
     Shared by the vmapped and the serial paths so their computations cannot
     drift apart.  ``mixer_factory(plan) -> Mixer`` is the backend's
     execution strategy; the plan arrives as a traced operand, never baked
-    in."""
+    in.
+
+    With a :class:`~repro.obs.record.Telemetry` attached the returned
+    runner takes two extra operands ``(tag, log_every)``: the recorder's
+    ring buffer joins the scan carry, every round records the theory
+    metrics on-device at the (traced) cadence, and the per-config ``tag``
+    keys the host event stream — under the sweep vmap each config flushes
+    its own buffer, so one compiled program emits S metric streams.  The
+    training state update is untouched: metrics-on trajectories are
+    bit-identical to metrics-off (pinned by tests/test_obs.py)."""
     metrics = _metrics_caller(metrics_fn)
 
-    def run_one(hyper, plan, params, batches):
+    if telemetry is None:
+        def run_one(hyper, plan, params, batches):
+            mixer = mixer_factory(plan)
+            # schedules carrying an active CompressionSpec need the CHOCO
+            # error-feedback memory on the state; the spec arrives per sweep
+            # point (its kind is static, so this branch is trace-stable)
+            state0 = dep_init(params, n_clients,
+                              compress=active_compression(plan))
+
+            def body(state, batches_r):
+                state, _ = local_then_comm_round(
+                    state, batches_r, grad_fn, config, mixer, hyper=hyper
+                )
+                return state, metrics(state, hyper, plan)
+
+            return jax.lax.scan(body, state0, batches)
+
+        return run_one
+
+    from repro.obs.metrics import round_values
+
+    def run_one_tel(hyper, plan, params, batches, tag, log_every):
         mixer = mixer_factory(plan)
-        # schedules carrying an active CompressionSpec need the CHOCO
-        # error-feedback memory on the state; the spec arrives per sweep
-        # point (its kind is static, so this branch is trace-stable)
         state0 = dep_init(params, n_clients,
                           compress=active_compression(plan))
+        n_rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
 
-        def body(state, batches_r):
-            state, _ = local_then_comm_round(
+        def body(carry, batches_r):
+            state, tcarry = carry
+            state, aux = local_then_comm_round(
                 state, batches_r, grad_fn, config, mixer, hyper=hyper
             )
-            return state, metrics(state, hyper, plan)
+            r = (state.t - 1) // config.comm_period
+            vals = round_values(state, config, hyper=hyper, mixer=plan,
+                                aux=aux, n=n_clients)
+            tcarry = telemetry.record(tcarry, vals, r, log_every,
+                                      force=r >= n_rounds - 1)
+            telemetry.emit(tcarry, tag)
+            return (state, tcarry), metrics(state, hyper, plan)
 
-        return jax.lax.scan(body, state0, batches)
+        (state, _), outs = jax.lax.scan(
+            body, (state0, telemetry.init_carry()), batches)
+        return state, outs
 
-    return run_one
+    return run_one_tel
 
 
 def sweep_init(params0: PyTree, n_clients: int, n: int,
@@ -329,6 +367,8 @@ def sweep_run(
     batch_axis: Optional[int] = None,
     params_axis: Optional[int] = None,
     backend: Optional[ExecutionBackend] = None,
+    telemetry=None,
+    log_every: int = 1,
 ) -> tuple[DepositumState, dict]:
     """Run ``rounds`` federated rounds for every sweep point at once.
 
@@ -347,6 +387,12 @@ def sweep_run(
 
     The whole thing is one jitted program: scan over rounds inside, vmap
     over the sweep axis outside, client vmap innermost (inside ``grad_fn``).
+
+    ``telemetry`` (a :class:`~repro.obs.record.Telemetry`) records the
+    per-round theory metrics on-device inside the scan and emits one event
+    stream per config (``config=s`` matches the sweep index); ``log_every``
+    is the recording cadence — a traced operand, so changing it reuses the
+    compiled program (the final round always records).
     """
     backend = backend or StackedVmapBackend()
     config.validate(hypers)  # host-side range checks on the concrete grid
@@ -360,10 +406,20 @@ def sweep_run(
     mixer_factory = ((lambda p: legacy) if legacy is not None
                      else backend.mixer_for)
     run_one = _scanned_run(grad_fn, config, n_clients, metrics_fn,
-                           mixer_factory)
-    runner = jax.jit(jax.vmap(
-        run_one, in_axes=(hyper_axes, plan_axes, params_axis, batch_axis)))
-    final_states, outs = runner(hypers, plan, params0, batches)
+                           mixer_factory, telemetry)
+    if telemetry is None:
+        runner = jax.jit(jax.vmap(
+            run_one,
+            in_axes=(hyper_axes, plan_axes, params_axis, batch_axis)))
+        final_states, outs = runner(hypers, plan, params0, batches)
+    else:
+        runner = jax.jit(jax.vmap(
+            run_one, in_axes=(hyper_axes, plan_axes, params_axis,
+                              batch_axis, 0, None)))
+        final_states, outs = runner(
+            hypers, plan, params0, batches,
+            jnp.arange(S, dtype=jnp.int32),
+            jnp.asarray(log_every, jnp.int32))
     return final_states, outs
 
 
@@ -380,6 +436,8 @@ def sweep_run_sequential(
     batch_axis: Optional[int] = None,
     params_axis: Optional[int] = None,
     backend: Optional[ExecutionBackend] = None,
+    telemetry=None,
+    log_every: int = 1,
 ) -> tuple[DepositumState, dict]:
     """Reference path: same computation, one sweep point at a time.
 
@@ -402,7 +460,7 @@ def sweep_run_sequential(
     # so the equivalence the tests assert is between vmap and a serial loop,
     # never between two drifting copies of the round logic
     run_one = jax.jit(_scanned_run(grad_fn, config, n_clients,
-                                   metrics_fn, mixer_factory))
+                                   metrics_fn, mixer_factory, telemetry))
 
     results = []
     for s in range(S):
@@ -411,7 +469,15 @@ def sweep_run_sequential(
         plan_s = plan.point(s)
         params_s = _take(params0, s, params_axis)
         batches_s = _take(batches, s, batch_axis)
-        results.append(run_one(hyper_s, plan_s, params_s, batches_s))
+        if telemetry is None:
+            results.append(run_one(hyper_s, plan_s, params_s, batches_s))
+        else:
+            # tag / log_every are traced operands: all S points share one
+            # compiled program, exactly as in the vmapped path
+            results.append(run_one(
+                hyper_s, plan_s, params_s, batches_s,
+                jnp.asarray(s, jnp.int32),
+                jnp.asarray(log_every, jnp.int32)))
     final = jax.tree_util.tree_map(lambda *vs: jnp.stack(vs),
                                    *[r[0] for r in results])
     outs = jax.tree_util.tree_map(lambda *vs: jnp.stack(vs),

@@ -25,6 +25,9 @@ from repro.core import (
 from repro.core.mixing import MixPlan, validate_plan
 from repro.core.schedule import MixSchedule, validate_schedule
 from repro.models.registry import Model
+from repro.obs.metrics import round_values
+from repro.obs.record import Telemetry
+from repro.obs.trace import RoundTimer, profile_capture
 from repro.training.backends import ExecutionBackend, suggest_backend
 
 
@@ -55,7 +58,8 @@ class FederatedTrainer:
 
     def __init__(self, model: Model, cfg: TrainerConfig, mixer=None,
                  backend: ExecutionBackend | None = None,
-                 schedule: MixSchedule | None = None):
+                 schedule: MixSchedule | None = None,
+                 telemetry: Telemetry | bool | None = None):
         self.model = model
         self.cfg = cfg
         plan = MixPlan.from_topology(cfg.topology, cfg.n_clients)
@@ -73,6 +77,7 @@ class FederatedTrainer:
                     "the padded length")
             validate_schedule(schedule, cfg.n_clients)
         operand = schedule if schedule is not None else plan
+        self._mix_operand = operand
         backend = backend or suggest_backend(operand, cfg.n_clients)
         self.backend = backend
         self.mixer = (mixer if mixer is not None
@@ -81,11 +86,18 @@ class FederatedTrainer:
         def per_client_loss(params, batch):
             return model.loss(params, batch)
 
-        grad_one = jax.grad(per_client_loss, has_aux=True)
+        # value_and_grad, not grad: the per-client scalar loss joins the
+        # aux ({"loss": ...}) so history/telemetry always have one even
+        # when the model's own aux carries no "ce".  Gradients (hence
+        # trajectories) are bit-identical — grad IS value_and_grad with
+        # the value dropped.
+        vg_one = jax.value_and_grad(per_client_loss, has_aux=True)
 
         def grad_fn(x_stacked, batch):
-            g, aux = jax.vmap(grad_one)(x_stacked, batch)
-            return g, aux
+            (loss, aux), g = jax.vmap(vg_one)(x_stacked, batch)
+            merged = dict(aux) if isinstance(aux, dict) else {}
+            merged.setdefault("loss", loss)
+            return g, merged
 
         self._grad_fn = grad_fn
         self._round = jax.jit(
@@ -94,9 +106,44 @@ class FederatedTrainer:
             )
         )
 
+        if telemetry is True:
+            telemetry = Telemetry.memory()
+        self.telemetry = telemetry or None
+        self.timer = RoundTimer()
+        if self.telemetry is not None:
+            tel = self.telemetry
+
+            def round_tel(state, batches, carry, log_every, force):
+                state, aux = local_then_comm_round(
+                    state, batches, grad_fn, cfg.depositum, self.mixer)
+                r = (state.t - 1) // cfg.depositum.comm_period
+                vals = round_values(state, cfg.depositum,
+                                    mixer=self._mix_operand,
+                                    aux=aux, n=cfg.n_clients)
+                carry = tel.record_and_emit(carry, vals, r, log_every,
+                                            force=force)
+                return state, aux, carry
+
+            # telemetry reads the post-round state and writes only its own
+            # carry: state trajectories are bit-identical to metrics-off.
+            # log_every / force are traced operands — cadence toggles
+            # cannot recompile (pinned by tests/test_obs.py).
+            self._round_tel = jax.jit(round_tel)
+
     def init_state(self, key) -> DepositumState:
         params, _axes = self.model.init(key)
         return dep_init(params, self.cfg.n_clients)
+
+    def _logged_rounds(self, n_rounds: int) -> list[int]:
+        """Explicit cadence: 1-based rounds that land in history — every
+        ``log_every``-th plus always the final one (previously the final
+        round was the *only* guaranteed record and intermediate rounds off
+        cadence vanished silently)."""
+        le = max(1, self.cfg.log_every)
+        rounds = [r for r in range(1, n_rounds + 1) if r % le == 0]
+        if n_rounds >= 1 and n_rounds not in rounds:
+            rounds.append(n_rounds)
+        return rounds
 
     def run(
         self,
@@ -104,20 +151,57 @@ class FederatedTrainer:
         batch_iter: Iterator[Any],
         n_rounds: int,
         eval_fn: Optional[Callable[[DepositumState, int], dict]] = None,
+        *,
+        profile_dir: Optional[str] = None,
     ) -> tuple[DepositumState, list[dict]]:
-        """batch_iter yields pytrees with leaves (T0, n_clients, B, ...)."""
+        """batch_iter yields pytrees with leaves (T0, n_clients, B, ...).
+
+        History has one record per :meth:`_logged_rounds` entry with
+        ``round``, ``wall_s``, ``loss`` (the model's scalar loss aux,
+        ``ce`` when available) and any ``eval_fn`` keys; with telemetry
+        attached, the recorded metric streams (consensus errors,
+        prox-gradient norm, bytes-on-wire, ...) merge in by round.
+        ``profile_dir`` opts into a ``jax.profiler.trace`` capture of the
+        whole loop.  ``self.timer`` accumulates blocked-vs-dispatch round
+        times across the run.
+        """
+        tel = self.telemetry
+        logged = set(self._logged_rounds(n_rounds))
         history: list[dict] = []
+        by_round: dict[int, dict] = {}
         t0 = time.perf_counter()
-        for r in range(n_rounds):
-            batches = next(batch_iter)
-            state, aux = self._round(state, batches)
-            if (r + 1) % self.cfg.log_every == 0 or r == n_rounds - 1:
-                rec = {"round": r + 1, "wall_s": time.perf_counter() - t0}
-                if isinstance(aux, dict) and "ce" in aux:
-                    rec["loss"] = float(jnp.mean(aux["ce"]))
-                if eval_fn is not None:
-                    rec.update(eval_fn(state, r + 1))
-                history.append(rec)
+        timer = self.timer
+        carry = tel.init_carry() if tel is not None else None
+        with profile_capture(profile_dir, enabled=profile_dir is not None):
+            for r in range(n_rounds):
+                batches = next(batch_iter)
+                with timer.round():
+                    if tel is None:
+                        state, aux = self._round(state, batches)
+                    else:
+                        state, aux, carry = self._round_tel(
+                            state, batches, carry, self.cfg.log_every,
+                            r == n_rounds - 1)
+                if (r + 1) in logged:
+                    rec = {"round": r + 1,
+                           "wall_s": time.perf_counter() - t0}
+                    loss = None
+                    if isinstance(aux, dict):
+                        loss = aux.get("ce", aux.get("loss"))
+                    if loss is not None:
+                        rec["loss"] = float(jnp.mean(loss))
+                    if eval_fn is not None:
+                        rec.update(eval_fn(state, r + 1))
+                    by_round[r + 1] = rec
+                    history.append(rec)
+        timer.block_on(state)
+        if tel is not None:
+            tel.sync()
+            for event in tel.events(0):
+                rec = by_round.get(event["round"])
+                if rec is not None:
+                    rec.update((k, v) for k, v in event.items()
+                               if k not in ("config", "round"))
         return state, history
 
     def mean_params(self, state: DepositumState):
