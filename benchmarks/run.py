@@ -236,6 +236,23 @@ def main() -> None:
                 f"{sec['jsonl_events']} events)")
             print(lines[-1], flush=True)
 
+    if wanted("async_throughput"):
+        from benchmarks import async_throughput as m
+        sec = m.section(quick=args.quick)
+        bench_sweep["async_throughput"] = sec
+        for name, row in sec["distributions"].items():
+            if "round_throughput_ratio" not in row:
+                lines.append(f"async/{name},0.0,sync_equiv_bitexact="
+                             f"{row['sync_equiv_bitexact']}")
+            else:
+                lines.append(
+                    f"async/{name},{row['wall_s'] * 1e6 / sec['rounds']:.1f},"
+                    f"{row['round_throughput_ratio']:.2f}x vs sync barrier "
+                    f"(virtual {row['async_virtual_time']:.1f} vs "
+                    f"{row['sync_virtual_time']:.1f}, "
+                    f"{row['applies']} applies/{row['rejects']} rejects)")
+            print(lines[-1], flush=True)
+
     with open(os.path.join(args.out, "summary.csv"), "w") as f:
         f.write("\n".join(lines) + "\n")
     print(f"\nwrote {args.out}/summary.csv")
@@ -270,6 +287,16 @@ def main() -> None:
             "obs_overhead ran but BENCH_sweep.json gained no " \
             "obs_overhead section"
         assert bench_sweep["obs_overhead"]["jsonl_events"] > 0
+    if wanted("async_throughput") and args.quick:
+        # CI contract: the async job's quick run must record the throughput
+        # section with the >= 1.3x exponential-straggler headline and the
+        # tau=0 sync-equivalence re-check
+        assert "async_throughput" in bench_sweep, \
+            "async_throughput ran but BENCH_sweep.json gained no " \
+            "async_throughput section"
+        assert bench_sweep["async_throughput"]["headline_ratio"] >= 1.3
+        assert (bench_sweep["async_throughput"]["distributions"]["zero"]
+                ["sync_equiv_bitexact"])
 
     if bench_sweep:  # at least one ratio measured
         bench_path = os.path.join(_ROOT, "BENCH_sweep.json")

@@ -61,6 +61,14 @@ from repro.core.compression import (  # noqa: F401
     unpack_payload,
     wire_mode,
 )
+from repro.core.staleness import (  # noqa: F401
+    StalenessPolicy,
+    StragglerModel,
+    check_bounded_staleness,
+    replay_cohorts,
+    replay_staleness,
+    sync_virtual_time,
+)
 from repro.core.schedule import (  # noqa: F401
     MixSchedule,
     ScheduleMixer,

@@ -65,6 +65,30 @@ def make_grad_fn(model: Model, microbatch: int = 1):
     return grad_fn
 
 
+def make_value_grad_fn(model: Model):
+    """Per-client gradients with the scalar loss joined into the aux.
+
+    ``value_and_grad``, not ``grad``: the per-client loss lands in the aux
+    (``{"loss": ...}``) so history/telemetry always have one even when the
+    model's own aux carries no ``"ce"``.  Gradients — hence trajectories —
+    are bit-identical to :func:`make_grad_fn`'s (``grad`` IS
+    ``value_and_grad`` with the value dropped).  Shared by
+    ``FederatedTrainer`` and ``AsyncTrainer`` so the synchronous scan and
+    the async driver run the *same* gradient program — the τ=0
+    sync-equivalence pin compares their trajectories bit for bit.
+    """
+    vg_one = jax.value_and_grad(lambda p, b: model.loss(p, b),
+                                has_aux=True)
+
+    def grad_fn(x_stacked, batch):
+        (loss, aux), g = jax.vmap(vg_one)(x_stacked, batch)
+        merged = dict(aux) if isinstance(aux, dict) else {}
+        merged.setdefault("loss", loss)
+        return g, merged
+
+    return grad_fn
+
+
 def build_train_step(
     model: Model,
     dep_cfg: DepositumConfig,

@@ -37,6 +37,12 @@ round from inside the ``lax.scan`` on any backend:
   loss every :mod:`repro.models` zoo model and ``value_and_grad`` trainer
   reports), else NaN.  NaN — not a missing key — is the "no loss" value,
   so streams stay rectangular.
+* ``staleness``      — mean age (in learner rounds) of the client updates
+  *applied* this round.  Bulk-synchronous rounds apply only fresh work,
+  so every synchronous path records an identical 0.0; the async runtime
+  (:mod:`repro.training.async_runtime`) passes its per-round mean through
+  ``round_values(staleness=...)``.  0.0 — not NaN — is the sync value so
+  sync/async streams compare directly.
 
 All values are float32 scalars; :mod:`repro.obs.record` packs them into the
 scan-carried buffer in :data:`DEFAULT_METRICS` order.
@@ -73,7 +79,7 @@ PyTree = Any
 #: Every in-loop metric the recorder knows, in buffer-column order.
 DEFAULT_METRICS = ("prox_grad_sq", "consensus_x", "consensus_y",
                    "momentum_var", "track_err", "cohort_size",
-                   "wire_bytes", "loss")
+                   "wire_bytes", "loss", "staleness")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -302,6 +308,7 @@ def round_values(
     weights: Optional[jnp.ndarray] = None,
     d: Optional[int] = None,
     n: Optional[int] = None,
+    staleness: Any = None,
 ) -> dict:
     """All :data:`DEFAULT_METRICS` for the round that just finished.
 
@@ -312,7 +319,9 @@ def round_values(
     ``active_mask`` when not given.  ``d`` is the flattened per-client
     parameter count (defaults to the state's leaf sizes).  Reads only;
     never mutates the state — metrics-on trajectories are bit-identical
-    to metrics-off ones.
+    to metrics-off ones.  ``staleness`` is the mean applied-update age
+    this round (async runtime); ``None`` records 0.0 — the value every
+    bulk-synchronous round has by construction.
     """
     sched = getattr(mixer, "schedule", mixer)
     r = (state.t - 1) // config.comm_period
@@ -343,4 +352,6 @@ def round_values(
         "cohort_size": jnp.asarray(cohort, jnp.float32),
         "wire_bytes": jnp.asarray(wire, jnp.float32),
         "loss": _loss_from_aux(aux),
+        "staleness": jnp.asarray(0.0 if staleness is None else staleness,
+                                 jnp.float32),
     }

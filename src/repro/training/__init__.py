@@ -1,4 +1,9 @@
 from repro.training.train_loop import FederatedTrainer, TrainerConfig  # noqa: F401
+from repro.training.async_runtime import (  # noqa: F401
+    AsyncConfig,
+    AsyncTrainer,
+    tabulate_batches,
+)
 from repro.training.checkpoint import save_checkpoint, restore_checkpoint  # noqa: F401
 from repro.training.sweep import (  # noqa: F401
     broadcast_batches,

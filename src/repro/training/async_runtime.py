@@ -1,0 +1,552 @@
+"""Asynchronous federated runtime: actor/learner split with bounded staleness.
+
+Everything else in ``repro.training`` is bulk-synchronous: one ``lax.scan``
+advances every client in lockstep, so each round barriers on the slowest
+client.  This module adds the *time* side that the ``lazy`` schedules'
+*graph* side already models: client actors produce local-step work
+continuously, a learner applies gossip over whichever subset has **arrived**,
+and work older than a staleness bound τ is rejected or down-weighted.
+
+Two execution modes share one compiled round program and one admission
+policy:
+
+* :meth:`AsyncTrainer.run` — **deterministic virtual time.**  A discrete-
+  event loop advances a virtual clock: each client's work item completes
+  ``StragglerModel.delay(client, work_round)`` after dispatch, learner round
+  ``k`` closes at ``T_k = max(T_{k-1} + window, earliest pending arrival)``
+  (the second term skips ahead so an all-slow cohort can never deadlock the
+  learner), and every arrival/rejection/application is appended to a replay
+  log.  Delays are pure functions of ``(seed, client, work_round)``, so the
+  whole schedule is **replay-deterministic**: same seeds ⇒ identical event
+  order, identical trajectories, bit for bit.
+* :meth:`AsyncTrainer.run_threaded` — **wall-clock smoke.**  One OS thread
+  per client actor sleeps its scaled delay and posts to the learner queue.
+  Arrival order is OS-dependent (no replay guarantee); the admission
+  invariants — bounded staleness, duplicate rejection, liveness under dead
+  clients — hold identically, and a hard ``deadline_s`` turns any hang into
+  an exception.
+
+**Deferred execution.**  Client rows live in one stacked
+:class:`~repro.core.depositum.DepositumState` bank, and a pending client's
+row is — by construction — untouched between dispatch and arrival (a row
+only changes when its own work is applied: the round program freezes
+non-cohort rows, and the lazy-masked mixing matrix zeroes their
+contributions to everyone else, so nobody reads them either).  The driver
+therefore *defers* each work item's computation to its arrival instant and
+executes the whole cohort as ONE masked round program — numerically
+identical to snapshot-at-dispatch execution, but batched, compiled once,
+and identical in ops to the synchronous round.  That is what makes the
+keystone property checkable: with τ=0 and a zero-delay straggler model
+every round applies the full cohort with an all-ones mask, the lazy
+subgraph matrix of an all-active mask **is** W bit-for-bit
+(``core.schedule``'s documented invariant), and the async trajectory equals
+the synchronous ``lax.scan`` exactly — on the stacked-vmap and shard_map
+backends alike (pinned by ``tests/test_async.py``).
+
+The mixing mask is a *traced operand* (a ``lazy`` :class:`MixSchedule`
+whose ``active`` row is this round's staleness weights), so cohort changes
+never recompile, and ``downweight`` policies feed fractional weights
+straight into the same masked contraction (rows stay stochastic for any
+weights in [0, 1]).  Telemetry rides the existing ``repro.obs`` recorder —
+the ``staleness`` column of :data:`~repro.obs.metrics.DEFAULT_METRICS` —
+not a parallel logging path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import queue
+import threading
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DepositumState, init as dep_init, local_then_comm_round
+from repro.core.mixing import MixPlan, as_dense, validate_plan
+from repro.core.schedule import MixSchedule
+from repro.core.staleness import StalenessPolicy, StragglerModel
+from repro.launch.steps import make_value_grad_fn
+from repro.obs.metrics import round_values
+from repro.obs.record import Telemetry
+from repro.training.backends import ExecutionBackend, suggest_backend
+from repro.training.train_loop import FederatedTrainer, TrainerConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Learner-side async knobs: the staleness policy + the round window.
+
+    ``window`` is the learner's virtual-time round length (how long round k
+    collects arrivals past the previous close); ``None`` uses the straggler
+    model's nominal mean delay (or 1.0 when that is zero).  The policy
+    fields mirror :class:`~repro.core.staleness.StalenessPolicy`.
+    """
+
+    tau: int = 0
+    mode: str = "reject"          # reject | downweight
+    decay: float = 0.5
+    window: Optional[float] = None
+
+    def policy(self) -> StalenessPolicy:
+        return StalenessPolicy(tau=self.tau, mode=self.mode,
+                               decay=self.decay)
+
+
+def tabulate_batches(batch_iter: Iterator[Any], n_rounds: int
+                     ) -> Callable[[int], Any]:
+    """Pre-draw ``n_rounds`` batches into a random-access ``batch_fn``.
+
+    The async driver needs per-*work-round* batch access (a straggler may
+    apply round-3 work while the learner is on round 7), so it takes a
+    callable ``round -> batches`` rather than an iterator.  This adapter
+    turns any synchronous batch iterator into one, clamping past the end —
+    handing the SAME per-round batches to a :class:`FederatedTrainer` run
+    is what the bit-exact sync-equivalence tests do.
+    """
+    rounds = [next(batch_iter) for _ in range(n_rounds)]
+
+    def batch_fn(r: int):
+        return rounds[min(r, n_rounds - 1)]
+
+    return batch_fn
+
+
+class AsyncTrainer:
+    """Actor/learner DEPOSITUM driver with bounded staleness τ.
+
+    Lives beside :class:`~repro.training.train_loop.FederatedTrainer` and
+    shares its step construction — gradients come from the same
+    :func:`repro.launch.steps.make_value_grad_fn` factory and the round is
+    the same ``local_then_comm_round`` program, with two traced operands
+    added: the staleness-weight mask (as a ``lazy`` schedule's ``active``
+    row — reusing :class:`MixSchedule`'s lazy-subgraph masking for the
+    graph side) and, under telemetry, this round's applied-cohort mask and
+    mean staleness.  The plan densifies up front (masked dense gossip);
+    ``backend`` may be stacked-vmap (default) or shard_map.
+    """
+
+    def __init__(self, model, cfg: TrainerConfig, *,
+                 straggler: StragglerModel,
+                 async_cfg: Optional[AsyncConfig] = None,
+                 backend: Optional[ExecutionBackend] = None,
+                 telemetry: Telemetry | bool | None = None,
+                 plan: Optional[MixPlan] = None):
+        self.model = model
+        self.cfg = cfg
+        self.async_cfg = async_cfg or AsyncConfig()
+        self.policy = self.async_cfg.policy()
+        if straggler.n != cfg.n_clients:
+            raise ValueError(f"straggler models {straggler.n} clients but "
+                             f"cfg.n_clients={cfg.n_clients}")
+        self.straggler = straggler
+        if plan is None:
+            plan = MixPlan.from_topology(cfg.topology, cfg.n_clients)
+        if plan.kind != "dense":
+            plan = as_dense(plan, cfg.n_clients)
+        validate_plan(plan, cfg.n_clients)
+        self.plan = plan
+        # the round program's mixing operand: a lazy schedule whose single
+        # ``active`` row is this round's staleness-weight mask (traced, so
+        # cohort changes never recompile); all-ones reproduces W bit-exactly
+        self._sched0 = MixSchedule(
+            kind="lazy", plan=plan,
+            active=jnp.ones((1, cfg.n_clients), jnp.float32))
+        backend = backend or suggest_backend(plan, cfg.n_clients)
+        self.backend = backend
+        grad_fn = make_value_grad_fn(model)
+        self._grad_fn = grad_fn
+        dep = cfg.depositum
+
+        def round_prog(state, batches, sched):
+            mixer = backend.mixer_for(sched)
+            return local_then_comm_round(
+                state, batches, grad_fn, dep, mixer,
+                active_mask=sched.active[0])
+
+        self._round = jax.jit(round_prog)
+
+        if telemetry is True:
+            telemetry = Telemetry.memory()
+        self.telemetry = telemetry or None
+        if self.telemetry is not None:
+            tel = self.telemetry
+
+            def round_tel(state, batches, sched, applied_mask, staleness,
+                          carry, log_every, force):
+                state, aux = local_then_comm_round(
+                    state, batches, grad_fn, dep, backend.mixer_for(sched),
+                    active_mask=sched.active[0])
+                r = (state.t - 1) // dep.comm_period
+                vals = round_values(state, dep, mixer=sched, aux=aux,
+                                    active_mask=applied_mask,
+                                    n=cfg.n_clients, staleness=staleness)
+                carry = tel.record_and_emit(carry, vals, r, log_every,
+                                            force=force)
+                return state, aux, carry
+
+            # same shape as FederatedTrainer._round_tel: telemetry reads the
+            # post-round state, writes only its own carry — metrics-on is
+            # bit-exact with metrics-off (pinned under async by test_obs)
+            self._round_tel = jax.jit(round_tel)
+
+        # replay artifacts of the last run()
+        self.events: list[dict] = []
+        self.virtual_time: float = 0.0
+
+    # shared verbatim with the synchronous trainer
+    init_state = FederatedTrainer.init_state
+    mean_params = FederatedTrainer.mean_params
+    _logged_rounds = FederatedTrainer._logged_rounds
+
+    @property
+    def window(self) -> float:
+        """Resolved learner window (virtual time units)."""
+        if self.async_cfg.window is not None:
+            return float(self.async_cfg.window)
+        return self.straggler.nominal() or 1.0
+
+    # ------------------------------------------------------------------
+    # shared admission + device-round plumbing
+    # ------------------------------------------------------------------
+
+    def _gather_batches(self, batch_fn, cohort: dict, jit_ready=jnp.asarray):
+        """Batches for a mixed-work-round cohort: per-client columns.
+
+        Fast path — every applied client is on the same work round (always
+        true at τ=0/zero delay): that round's batches verbatim, which keeps
+        the sync-equivalence comparison operating on identical arrays.
+        Frozen clients' columns are discarded by the mask, so their content
+        is irrelevant.
+        """
+        rounds = sorted({wr for wr, _w, _s in cohort.values()})
+        base = batch_fn(rounds[0] if rounds else 0)
+        if len(rounds) <= 1:
+            return base
+        cache = {r: batch_fn(r) for r in rounds}
+        out = jax.tree_util.tree_map(jit_ready, base)
+        for c in sorted(cohort):
+            wr = cohort[c][0]
+            if wr == rounds[0]:
+                continue
+            out = jax.tree_util.tree_map(
+                lambda o, s, col=c: o.at[:, col].set(
+                    jnp.asarray(s)[:, col]), out, cache[wr])
+        return out
+
+    def _apply_cohort(self, state, carry, cohort: dict, batch_fn, force):
+        """Run ONE masked round program for this tick's applied cohort.
+
+        ``cohort`` maps client -> (work_round, weight, staleness); an empty
+        cohort still runs (all rows frozen, ``t`` advances — the shared
+        iteration counter) so telemetry records the degraded round.
+        """
+        n = self.cfg.n_clients
+        w = np.zeros(n, np.float32)
+        applied = np.zeros(n, np.float32)
+        stal = 0.0
+        for c, (_wr, wt, s) in cohort.items():
+            w[c] = wt
+            applied[c] = 1.0
+            stal += s
+        stal = stal / len(cohort) if cohort else 0.0
+        batches = self._gather_batches(batch_fn, cohort)
+        sched = dataclasses.replace(self._sched0,
+                                    active=jnp.asarray(w)[None, :])
+        if self.telemetry is None:
+            state, aux = self._round(state, batches, sched)
+        else:
+            state, aux, carry = self._round_tel(
+                state, batches, sched, jnp.asarray(applied),
+                jnp.float32(stal), carry, self.cfg.log_every, force)
+        return state, aux, carry, stal
+
+    def _admit(self, k: int, client: int, work_round: int,
+               dispatch_round: int, applied: set, cohort: dict):
+        """Admission decision for one arrival at learner round ``k``.
+
+        Returns ``(verdict, staleness)`` with verdict in
+        ``apply | duplicate | stale``.  An update is applied iff its
+        dispatch age ``s = k - dispatch_round`` is within τ AND its
+        (client, work_round) has never been applied — the bounded-staleness
+        and exactly-once invariants the tests property-check.
+        """
+        s = k - dispatch_round
+        if (client, work_round) in applied or client in cohort:
+            return "duplicate", s
+        if not self.policy.admits(s):
+            return "stale", s
+        return "apply", s
+
+    # ------------------------------------------------------------------
+    # deterministic virtual-time mode
+    # ------------------------------------------------------------------
+
+    def run(self, state: DepositumState, batch_fn: Callable[[int], Any],
+            n_rounds: int) -> tuple[DepositumState, list[dict]]:
+        """Drive ``n_rounds`` learner rounds of deterministic virtual time.
+
+        ``batch_fn(work_round)`` returns that work round's batches (leaves
+        ``(T0, n, B, ...)``) — see :func:`tabulate_batches`.  Returns
+        ``(state, history)`` like ``FederatedTrainer.run``; the replay log
+        lands in ``self.events`` (one dict per dispatch / apply / reject /
+        drop / tick, in event order) and the final virtual clock in
+        ``self.virtual_time``.
+        """
+        if not callable(batch_fn):
+            raise TypeError("batch_fn must be a callable round -> batches; "
+                            "wrap an iterator with tabulate_batches(...)")
+        n = self.cfg.n_clients
+        sm = self.straggler
+        window = self.window
+        events: list[dict] = []
+        self.events = events
+        tel = self.telemetry
+        carry = tel.init_carry() if tel is not None else None
+        applied: set = set()
+        wr_next = [0] * n          # each client's next work_round counter
+        pending: dict = {}          # client -> in-flight primary work item
+        dups: list = []             # duplicate copies still in flight
+
+        def dispatch(client: int, for_round: int, t: float):
+            wr = wr_next[client]
+            wr_next[client] += 1
+            item = {"client": client, "work_round": wr,
+                    "dispatch_round": for_round,
+                    "ready_at": t + sm.delay(client, wr),
+                    "dropped": sm.dropped(client, wr), "copy": False}
+            pending[client] = item
+            if sm.duplicated(client, wr):
+                dups.append({**item, "copy": True, "dropped": False,
+                             "ready_at": item["ready_at"]
+                             + sm.dup_lag(client, wr)})
+            events.append({"type": "dispatch", "t": t, "round": for_round,
+                           "client": client, "work_round": wr})
+
+        t_now = 0.0
+        for c in range(n):
+            dispatch(c, 0, t_now)
+
+        history: list[dict] = []
+        by_round: dict[int, dict] = {}
+        logged = set(self._logged_rounds(n_rounds))
+        t0 = time.perf_counter()
+        for k in range(n_rounds):
+            ready = [p["ready_at"] for p in pending.values()
+                     if math.isfinite(p["ready_at"])]
+            ready += [d["ready_at"] for d in dups
+                      if math.isfinite(d["ready_at"])]
+            if not ready:
+                raise RuntimeError(
+                    f"async learner round {k}: every in-flight work item "
+                    f"belongs to a dead client (dead={sm.dead}) — raising "
+                    "instead of waiting forever")
+            # close the window; skip ahead to the earliest arrival so an
+            # all-slow cohort advances instead of spinning empty rounds
+            t_k = max(t_now + window, min(ready))
+            arrivals = sorted(
+                [p for p in pending.values() if p["ready_at"] <= t_k]
+                + [d for d in dups if d["ready_at"] <= t_k],
+                key=lambda e: (e["ready_at"], e["client"], e["work_round"],
+                               e["copy"]))
+            cohort: dict = {}
+            redispatch: list[int] = []
+            for e in arrivals:
+                c, wr = e["client"], e["work_round"]
+                s = k - e["dispatch_round"]
+                if e["copy"]:
+                    # at-least-once delivery: the second copy is always
+                    # rejected — the primary lifecycle owns the work item
+                    dups.remove(e)
+                    events.append({"type": "reject", "t": e["ready_at"],
+                                   "round": k, "client": c, "work_round": wr,
+                                   "staleness": s, "reason": "duplicate"})
+                    continue
+                del pending[c]
+                if e["dropped"]:
+                    events.append({"type": "drop", "t": e["ready_at"],
+                                   "round": k, "client": c,
+                                   "work_round": wr})
+                    redispatch.append(c)
+                    continue
+                verdict, s = self._admit(k, c, wr, e["dispatch_round"],
+                                         applied, cohort)
+                if verdict != "apply":
+                    events.append({"type": "reject", "t": e["ready_at"],
+                                   "round": k, "client": c, "work_round": wr,
+                                   "staleness": s, "reason": verdict})
+                    redispatch.append(c)
+                    continue
+                cohort[c] = (wr, self.policy.weight(s), s)
+                applied.add((c, wr))
+                events.append({"type": "apply", "t": e["ready_at"],
+                               "round": k, "client": c, "work_round": wr,
+                               "staleness": s,
+                               "weight": self.policy.weight(s)})
+
+            state, aux, carry, stal = self._apply_cohort(
+                state, carry, cohort, batch_fn, k == n_rounds - 1)
+            events.append({"type": "tick", "round": k, "t": t_k,
+                           "cohort": sorted(cohort),
+                           "staleness_mean": stal})
+            # applied and rejected-stale clients go back to work; stragglers
+            # whose work is still in flight stay pending
+            for c in sorted(set(redispatch) | set(cohort)):
+                dispatch(c, k + 1, t_k)
+            t_now = t_k
+
+            if (k + 1) in logged:
+                rec = {"round": k + 1,
+                       "wall_s": time.perf_counter() - t0,
+                       "virtual_t": t_k, "cohort_size": len(cohort)}
+                loss = None
+                if isinstance(aux, dict):
+                    loss = aux.get("ce", aux.get("loss"))
+                if loss is not None:
+                    rec["loss"] = float(jnp.mean(loss))
+                by_round[k + 1] = rec
+                history.append(rec)
+
+        self.virtual_time = t_now
+        jax.block_until_ready(state)
+        if tel is not None:
+            tel.sync()
+            for event in tel.events(0):
+                rec = by_round.get(event["round"])
+                if rec is not None:
+                    rec.update((kk, v) for kk, v in event.items()
+                               if kk not in ("config", "round"))
+        return state, history
+
+    # ------------------------------------------------------------------
+    # wall-clock threaded mode (liveness smoke; no replay guarantee)
+    # ------------------------------------------------------------------
+
+    def run_threaded(self, state: DepositumState,
+                     batch_fn: Callable[[int], Any], n_rounds: int, *,
+                     time_scale: float = 0.02, deadline_s: float = 60.0
+                     ) -> tuple[DepositumState, list[dict]]:
+        """Actor threads + wall-clock windows: the nondeterministic smoke.
+
+        Each client actor sleeps ``delay * time_scale`` seconds then posts
+        to the learner queue; the learner collects per wall-clock window
+        (extending while empty) and applies the same admission policy as
+        :meth:`run`.  Dead clients simply never post — liveness comes from
+        the window, and ``deadline_s`` bounds the WHOLE run: on expiry the
+        learner stops the actors and raises.  Returns ``(state, events)``;
+        telemetry is not recorded in this mode (use :meth:`run`).
+        """
+        n = self.cfg.n_clients
+        sm = self.straggler
+        pol = self.policy
+        window_s = max(self.window * time_scale, 1e-3)
+        arrivals: queue.Queue = queue.Queue()
+        boxes = [queue.Queue() for _ in range(n)]
+        stop = threading.Event()
+
+        def actor(c: int):
+            while not stop.is_set():
+                try:
+                    job = boxes[c].get(timeout=0.05)
+                except queue.Empty:
+                    continue
+                if job is None:
+                    return
+                wr, kd = job
+                d = sm.delay(c, wr)
+                if not math.isfinite(d):
+                    continue   # dead client: computes forever, never posts
+                time.sleep(min(d * time_scale, deadline_s))
+                if sm.dropped(c, wr):
+                    arrivals.put(("drop", c, wr, kd))
+                    continue
+                arrivals.put(("arrive", c, wr, kd))
+                if sm.duplicated(c, wr):
+                    arrivals.put(("dup", c, wr, kd))
+
+        threads = [threading.Thread(target=actor, args=(c,), daemon=True)
+                   for c in range(n)]
+        for th in threads:
+            th.start()
+        events: list[dict] = []
+        applied: set = set()
+        wr_next = [0] * n
+        deadline = time.monotonic() + deadline_s
+
+        def dispatch(c: int, for_round: int):
+            wr = wr_next[c]
+            wr_next[c] += 1
+            boxes[c].put((wr, for_round))
+            events.append({"type": "dispatch", "round": for_round,
+                           "client": c, "work_round": wr})
+
+        try:
+            if len(sm.dead) >= n:
+                raise RuntimeError("every client is dead; nothing can "
+                                   "ever arrive")
+            for c in range(n):
+                dispatch(c, 0)
+            for k in range(n_rounds):
+                cohort: dict = {}
+                round_deadline = time.monotonic() + window_s
+                while True:
+                    now = time.monotonic()
+                    if now >= deadline:
+                        raise RuntimeError(
+                            f"async run exceeded deadline_s={deadline_s} "
+                            f"at learner round {k}")
+                    if cohort and now >= round_deadline:
+                        break
+                    try:
+                        kind, c, wr, kd = arrivals.get(
+                            timeout=min(max(round_deadline - now, 1e-3),
+                                        deadline - now))
+                    except queue.Empty:
+                        continue   # window empty so far: keep collecting
+                    s = k - kd
+                    if kind == "drop":
+                        events.append({"type": "drop", "round": k,
+                                       "client": c, "work_round": wr})
+                        dispatch(c, k + 1)
+                        continue
+                    if kind == "dup":
+                        events.append({"type": "reject", "round": k,
+                                       "client": c, "work_round": wr,
+                                       "staleness": s,
+                                       "reason": "duplicate"})
+                        continue
+                    verdict, s = self._admit(k, c, wr, kd, applied, cohort)
+                    if verdict != "apply":
+                        events.append({"type": "reject", "round": k,
+                                       "client": c, "work_round": wr,
+                                       "staleness": s, "reason": verdict})
+                        dispatch(c, k + 1)
+                        continue
+                    cohort[c] = (wr, pol.weight(s), s)
+                    applied.add((c, wr))
+                    events.append({"type": "apply", "round": k, "client": c,
+                                   "work_round": wr, "staleness": s,
+                                   "weight": pol.weight(s)})
+                tel, self.telemetry = self.telemetry, None
+                try:
+                    state, _aux, _carry, stal = self._apply_cohort(
+                        state, None, cohort, batch_fn, False)
+                finally:
+                    self.telemetry = tel
+                events.append({"type": "tick", "round": k,
+                               "cohort": sorted(cohort),
+                               "staleness_mean": stal})
+                for c in sorted(cohort):
+                    dispatch(c, k + 1)
+        finally:
+            stop.set()
+            for box in boxes:
+                box.put(None)
+            for th in threads:
+                th.join(timeout=1.0)
+        jax.block_until_ready(state)
+        return state, events

@@ -24,6 +24,7 @@ from repro.core import (
 )
 from repro.core.mixing import MixPlan, validate_plan
 from repro.core.schedule import MixSchedule, validate_schedule
+from repro.launch.steps import make_value_grad_fn
 from repro.models.registry import Model
 from repro.obs.metrics import round_values
 from repro.obs.record import Telemetry
@@ -83,22 +84,9 @@ class FederatedTrainer:
         self.mixer = (mixer if mixer is not None
                       else backend.mixer_for(operand))
 
-        def per_client_loss(params, batch):
-            return model.loss(params, batch)
-
-        # value_and_grad, not grad: the per-client scalar loss joins the
-        # aux ({"loss": ...}) so history/telemetry always have one even
-        # when the model's own aux carries no "ce".  Gradients (hence
-        # trajectories) are bit-identical — grad IS value_and_grad with
-        # the value dropped.
-        vg_one = jax.value_and_grad(per_client_loss, has_aux=True)
-
-        def grad_fn(x_stacked, batch):
-            (loss, aux), g = jax.vmap(vg_one)(x_stacked, batch)
-            merged = dict(aux) if isinstance(aux, dict) else {}
-            merged.setdefault("loss", loss)
-            return g, merged
-
+        # shared with AsyncTrainer (same gradient program ⇒ the async τ=0
+        # sync-equivalence pin compares trajectories bit for bit)
+        grad_fn = make_value_grad_fn(model)
         self._grad_fn = grad_fn
         self._round = jax.jit(
             lambda state, batches: local_then_comm_round(

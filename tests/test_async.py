@@ -1,0 +1,500 @@
+"""Async runtime suite: sync-equivalence, replay, staleness, faults.
+
+The contracts under test, in order:
+
+* **Keystone**: with τ=0 and a zero-delay straggler model the async driver
+  reproduces the synchronous ``FederatedTrainer`` scan trajectory
+  **bit-exactly** — on stacked-vmap here and (slow, subprocess) on the
+  shard_map backend;
+* **Replay determinism**: same seeds ⇒ identical event logs (order and
+  content) and bit-identical final states, across delay distributions and
+  fault knobs;
+* **Bounded staleness**: no applied update is older than τ and no
+  (client, work_round) applies twice — property-tested over (τ,
+  distribution, seed) via ``tests/_propcheck.py``;
+* **Fault injection**: duplicated arrivals are rejected, dropped arrivals
+  retry, a permanently-dead client degrades the cohort (visible through
+  the existing ``cohort_size`` metric) without ever deadlocking the
+  learner — and an all-dead cohort raises instead of hanging;
+* **Threaded mode** (slow-marked, explicit deadlines): the wall-clock
+  actor threads keep the same admission invariants and the run-wide
+  deadline turns hangs into exceptions — Tier-1 never polls a thread.
+"""
+import dataclasses
+import math
+import textwrap
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DepositumConfig,
+    MixPlan,
+    StalenessPolicy,
+    StragglerModel,
+    check_bounded_staleness,
+    replay_cohorts,
+    replay_staleness,
+    sync_virtual_time,
+)
+from repro.core.mixing import as_dense
+from repro.core.schedule import MixSchedule
+from repro.training.async_runtime import (
+    AsyncConfig,
+    AsyncTrainer,
+    tabulate_batches,
+)
+from repro.training.train_loop import FederatedTrainer, TrainerConfig
+
+N, D, T0, B = 4, 6, 2, 3
+
+
+class _Model(NamedTuple):
+    cfg: object
+    init: object
+    forward_train: object
+    loss: object
+    forward_decode: object
+    init_decode_cache: object
+
+
+def _ls_model(d=D):
+    """Least squares ON the batch: trajectories depend on which round's
+    batches each client consumed — exactly what the async driver varies."""
+
+    def init(key):
+        return {"w": jnp.zeros((d,))}, None
+
+    def loss(params, batch):
+        e = batch["x"] @ params["w"] - batch["y"]
+        return jnp.mean(e * e), {}
+
+    return _Model(cfg=None, init=init, forward_train=None, loss=loss,
+                  forward_decode=None, init_decode_cache=None)
+
+
+def _cfg(n=N, log_every=1):
+    dep = DepositumConfig(alpha=0.05, comm_period=T0, prox_name="l1",
+                          prox_kwargs={"lam": 1e-4})
+    return TrainerConfig(n_clients=n, topology="ring", depositum=dep,
+                         log_every=log_every)
+
+
+def _round_batches(rounds, n=N, d=D, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"x": jnp.asarray(rng.normal(size=(T0, n, B, d)), jnp.float32),
+             "y": jnp.asarray(rng.normal(size=(T0, n, B)), jnp.float32)}
+            for _ in range(rounds)]
+
+
+def _dense_sched(n=N):
+    return MixSchedule.constant(as_dense(MixPlan.from_topology("ring", n), n))
+
+
+def _assert_bitexact(a, b, msg=""):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# Keystone: τ=0 / zero-delay async == synchronous scan, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_async_tau0_zero_delay_bitexact_with_sync_scan():
+    rounds = 5
+    cfg = _cfg()
+    model = _ls_model()
+    batches = _round_batches(rounds)
+    sync = FederatedTrainer(model, cfg, schedule=_dense_sched())
+    s_sync, _ = sync.run(sync.init_state(jax.random.PRNGKey(0)),
+                         iter(batches), rounds)
+    atr = AsyncTrainer(model, cfg, straggler=StragglerModel.zero(N),
+                       async_cfg=AsyncConfig(tau=0))
+    s_async, _ = atr.run(atr.init_state(jax.random.PRNGKey(0)),
+                         tabulate_batches(iter(batches), rounds), rounds)
+    _assert_bitexact(s_sync, s_async, "async τ=0/zero-delay drifted from "
+                                      "the synchronous scan")
+    # every round applied the full cohort with zero staleness
+    for cohort in replay_cohorts(atr.events):
+        assert sorted(cohort) == list(range(N))
+    assert replay_staleness(atr.events) == [0.0] * rounds
+
+
+@pytest.mark.slow
+def test_async_tau0_zero_delay_bitexact_shardmap():
+    from test_distributed import run_py
+    out = run_py(textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import DepositumConfig, MixPlan, StragglerModel
+        from repro.core.mixing import as_dense
+        from repro.core.schedule import MixSchedule
+        from repro.training.async_runtime import (
+            AsyncConfig, AsyncTrainer, tabulate_batches)
+        from repro.training.backends import ShardMapBackend
+        from repro.training.train_loop import FederatedTrainer, TrainerConfig
+        from typing import NamedTuple
+
+        class M(NamedTuple):
+            cfg: object; init: object; forward_train: object
+            loss: object; forward_decode: object; init_decode_cache: object
+
+        n, d, T0, rounds, Bsz = 8, 16, 2, 4, 3
+
+        def init(key):
+            return {"w": jnp.zeros((d,))}, None
+        def loss(params, batch):
+            e = batch["x"] @ params["w"] - batch["y"]
+            return jnp.mean(e * e), {}
+        model = M(None, init, None, loss, None, None)
+
+        dep = DepositumConfig(alpha=0.05, comm_period=T0, prox_name="l1",
+                              prox_kwargs={"lam": 1e-4})
+        cfg = TrainerConfig(n_clients=n, topology="ring", depositum=dep,
+                            log_every=1)
+        rng = np.random.default_rng(0)
+        batches = [{"x": jnp.asarray(rng.normal(size=(T0, n, Bsz, d)),
+                                     jnp.float32),
+                    "y": jnp.asarray(rng.normal(size=(T0, n, Bsz)),
+                                     jnp.float32)} for _ in range(rounds)]
+        plan = as_dense(MixPlan.from_topology("ring", n), n)
+        mesh = jax.make_mesh((8,), ("clients",))
+        backend = ShardMapBackend(mesh=mesh, n_clients=n)
+        sync = FederatedTrainer(model, cfg,
+                                schedule=MixSchedule.constant(plan),
+                                backend=backend)
+        s_sync, _ = sync.run(sync.init_state(jax.random.PRNGKey(0)),
+                             iter(batches), rounds)
+        atr = AsyncTrainer(model, cfg, straggler=StragglerModel.zero(n),
+                           async_cfg=AsyncConfig(tau=0), backend=backend,
+                           plan=plan)
+        s_async, _ = atr.run(atr.init_state(jax.random.PRNGKey(0)),
+                             tabulate_batches(iter(batches), rounds), rounds)
+        for a, b in zip(jax.tree_util.tree_leaves(s_sync),
+                        jax.tree_util.tree_leaves(s_async)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("OK shard_map async==sync")
+    """))
+    assert "OK shard_map async==sync" in out
+
+
+# ---------------------------------------------------------------------------
+# Replay determinism
+# ---------------------------------------------------------------------------
+
+def _run_once(straggler, async_cfg, rounds=6, seed=1, telemetry=None):
+    cfg = _cfg()
+    model = _ls_model()
+    batches = _round_batches(rounds)
+    tr = AsyncTrainer(model, cfg, straggler=straggler, async_cfg=async_cfg,
+                      telemetry=telemetry)
+    state, hist = tr.run(tr.init_state(jax.random.PRNGKey(seed)),
+                         tabulate_batches(iter(batches), rounds), rounds)
+    return tr, state, hist
+
+
+@pytest.mark.parametrize("make_straggler", [
+    lambda: StragglerModel.exponential(1.0, N, seed=3),
+    lambda: StragglerModel.heavytail(1.0, N, seed=5, shape=2.0),
+    lambda: StragglerModel.exponential(0.7, N, seed=9).with_faults(
+        p_drop=0.3, p_dup=0.3),
+    lambda: StragglerModel.deterministic([0.2, 0.5, 1.0, 4.0], dead=(2,)),
+], ids=["exponential", "heavytail", "faults", "det-dead"])
+def test_replay_determinism(make_straggler):
+    """Same seeds ⇒ identical event order AND bit-identical final state."""
+    acfg = AsyncConfig(tau=2)
+    tr1, s1, h1 = _run_once(make_straggler(), acfg)
+    tr2, s2, h2 = _run_once(make_straggler(), acfg)
+    assert tr1.events == tr2.events
+    assert tr1.virtual_time == tr2.virtual_time
+    _assert_bitexact(s1, s2, "replay produced a different trajectory")
+
+
+def test_straggler_draws_are_pure_functions_of_args():
+    sm = StragglerModel.exponential(1.0, N, seed=7).with_faults(
+        p_drop=0.4, p_dup=0.4)
+    fwd = [(sm.delay(c, w), sm.dropped(c, w), sm.duplicated(c, w))
+           for c in range(N) for w in range(5)]
+    bwd = [(sm.delay(c, w), sm.dropped(c, w), sm.duplicated(c, w))
+           for c in reversed(range(N)) for w in reversed(range(5))]
+    assert fwd == list(reversed(bwd))  # call order is irrelevant
+
+
+def test_straggler_kinds_and_validation():
+    assert StragglerModel.zero(3).delay(0, 0) == 0.0
+    det = StragglerModel.deterministic([0.5, 1.5])
+    assert det.delay(1, 7) == 1.5 and det.nominal() == 1.0
+    exp = StragglerModel.exponential(2.0, 4, seed=1)
+    draws = [exp.delay(0, w) for w in range(200)]
+    assert 1.0 < np.mean(draws) < 4.0 and np.std(draws) > 0
+    ht = StragglerModel.heavytail(2.0, 4, seed=1, shape=3.0)
+    assert 0.5 < np.mean([ht.delay(1, w) for w in range(400)]) < 8.0
+    assert math.isinf(StragglerModel.zero(2, dead=(1,)).delay(1, 0))
+    with pytest.raises(ValueError):
+        StragglerModel(kind="nope", scale=(1.0,))
+    with pytest.raises(ValueError):
+        StragglerModel.heavytail(1.0, 2, shape=1.0)
+    with pytest.raises(ValueError):
+        StragglerModel.zero(2, dead=(5,))
+    with pytest.raises(ValueError):
+        StragglerModel.exponential(1.0, 2).with_faults(p_drop=1.5)
+
+
+def test_staleness_policy_validation_and_weights():
+    pol = StalenessPolicy(tau=3, mode="downweight", decay=0.5)
+    assert pol.admits(3) and not pol.admits(4)
+    assert pol.weight(2) == 0.25
+    assert StalenessPolicy(tau=1).weight(1) == 1.0
+    with pytest.raises(ValueError):
+        StalenessPolicy(tau=-1)
+    with pytest.raises(ValueError):
+        StalenessPolicy(mode="maybe")
+    with pytest.raises(ValueError):
+        StalenessPolicy(mode="downweight", decay=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Bounded staleness (property-tested) + downweight policy
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(tau=st.integers(min_value=0, max_value=3),
+       mean=st.floats(min_value=0.3, max_value=2.0),
+       seed=st.integers(min_value=0, max_value=10_000),
+       kind=st.sampled_from(["exponential", "heavytail", "deterministic"]),
+       faulty=st.booleans())
+def test_bounded_staleness_invariant(tau, mean, seed, kind, faulty):
+    """No applied update older than τ; nothing applied twice — for any
+    (τ, delay distribution, seed, fault) point; and the recorded tick
+    staleness equals the replay-log recompute."""
+    if kind == "exponential":
+        sm = StragglerModel.exponential(mean, N, seed=seed)
+    elif kind == "heavytail":
+        sm = StragglerModel.heavytail(mean, N, seed=seed, shape=2.0)
+    else:
+        sm = StragglerModel.deterministic(
+            [mean * (i + 1) / N for i in range(N)])
+    if faulty:
+        sm = sm.with_faults(p_drop=0.25, p_dup=0.25)
+    rounds = 4
+    tr, _state, _h = _run_once(sm, AsyncConfig(tau=tau), rounds=rounds,
+                               seed=seed % 7)
+    check_bounded_staleness(tr.events, tau)
+    ticks = [e for e in tr.events if e["type"] == "tick"]
+    assert [e["round"] for e in ticks] == list(range(rounds))
+    assert [e["staleness_mean"] for e in ticks] == replay_staleness(tr.events)
+
+
+def test_downweight_policy_scales_weights_by_age():
+    sm = StragglerModel.exponential(1.5, N, seed=11)
+    tr, state, _ = _run_once(sm, AsyncConfig(tau=3, mode="downweight",
+                                             decay=0.5))
+    applies = [e for e in tr.events if e["type"] == "apply"]
+    assert applies
+    assert any(e["staleness"] > 0 for e in applies)  # the knob is exercised
+    for e in applies:
+        assert e["weight"] == 0.5 ** e["staleness"]
+    for leaf in jax.tree_util.tree_leaves(state):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+# ---------------------------------------------------------------------------
+# Fault injection: duplicates, drops, dead clients
+# ---------------------------------------------------------------------------
+
+def test_duplicated_arrivals_are_rejected():
+    sm = StragglerModel.exponential(0.8, N, seed=2).with_faults(p_dup=1.0)
+    tr, _state, _ = _run_once(sm, AsyncConfig(tau=2))
+    rejects = [e for e in tr.events
+               if e["type"] == "reject" and e["reason"] == "duplicate"]
+    assert rejects, "p_dup=1 produced no duplicate rejections"
+    applied = [(e["client"], e["work_round"]) for e in tr.events
+               if e["type"] == "apply"]
+    assert len(applied) == len(set(applied)), "a work item applied twice"
+
+
+def test_dropped_arrivals_retry_and_never_deadlock():
+    # every arrival lost: nothing ever applies, yet all rounds close
+    sm = StragglerModel.deterministic([0.5] * N, p_drop=1.0)
+    tr, _state, _ = _run_once(sm, AsyncConfig(tau=1), rounds=4)
+    assert sum(1 for e in tr.events if e["type"] == "tick") == 4
+    assert not [e for e in tr.events if e["type"] == "apply"]
+    drops = [e for e in tr.events if e["type"] == "drop"]
+    assert drops
+    # dropped clients re-dispatch: later work_rounds appear
+    assert max(e["work_round"] for e in drops) > 0
+    # intermittent drops: progress resumes
+    sm2 = StragglerModel.deterministic([0.5] * N, p_drop=0.5)
+    tr2, _s2, _ = _run_once(sm2, AsyncConfig(tau=1), rounds=6)
+    assert [e for e in tr2.events if e["type"] == "apply"]
+
+
+def test_dead_client_degrades_cohort_without_deadlock():
+    from repro.obs.metrics import MetricSpec
+    from repro.obs.record import Telemetry
+    rounds = 6
+    sm = StragglerModel.deterministic([0.5] * N, dead=(1,))
+    tel = Telemetry.memory(MetricSpec(buffer=rounds + 1))
+    tr, _state, _ = _run_once(sm, AsyncConfig(tau=1), rounds=rounds,
+                              telemetry=tel)
+    assert all(1 not in c for c in replay_cohorts(tr.events))
+    tr.telemetry.sync()
+    events = tr.telemetry.events(0)
+    assert len(events) == rounds
+    # the degraded cohort shows through the EXISTING cohort_size metric
+    assert all(e["cohort_size"] == N - 1 for e in events)
+
+
+def test_all_dead_cohort_raises_instead_of_hanging():
+    sm = StragglerModel.deterministic([0.5] * N, dead=tuple(range(N)))
+    cfg = _cfg()
+    tr = AsyncTrainer(_ls_model(), cfg, straggler=sm)
+    with pytest.raises(RuntimeError, match="dead"):
+        tr.run(tr.init_state(jax.random.PRNGKey(0)),
+               tabulate_batches(iter(_round_batches(2)), 2), 2)
+
+
+def test_sync_virtual_time_is_infinite_with_dead_clients():
+    sm = StragglerModel.deterministic([0.5] * N, dead=(0,))
+    assert math.isinf(sync_virtual_time(sm, 3))
+    assert sync_virtual_time(StragglerModel.deterministic([1.0, 2.0]),
+                             3) == 6.0
+
+
+# ---------------------------------------------------------------------------
+# Driver mechanics: skip-ahead, batch gather, adapters, validation
+# ---------------------------------------------------------------------------
+
+def test_learner_skips_ahead_past_empty_windows():
+    """All clients slower than the window: T_k jumps to the earliest
+    arrival instead of spinning empty rounds."""
+    sm = StragglerModel.deterministic([5.0] * N)
+    tr, _state, _ = _run_once(sm, AsyncConfig(tau=0, window=1.0), rounds=3)
+    for cohort in replay_cohorts(tr.events):
+        assert sorted(cohort) == list(range(N))
+    ticks = [e["t"] for e in tr.events if e["type"] == "tick"]
+    assert ticks == [5.0, 10.0, 15.0]
+
+
+def test_gather_batches_mixes_work_round_columns():
+    cfg = _cfg()
+    tr = AsyncTrainer(_ls_model(), cfg, straggler=StragglerModel.zero(N))
+    batches = _round_batches(3)
+    bf = lambda r: batches[min(r, 2)]
+    # clients 0,2 on work round 0; client 3 straggling in with round 2 work
+    cohort = {0: (0, 1.0, 0), 2: (0, 1.0, 0), 3: (2, 1.0, 1)}
+    got = tr._gather_batches(bf, cohort)
+    np.testing.assert_array_equal(np.asarray(got["x"][:, 0]),
+                                  np.asarray(batches[0]["x"][:, 0]))
+    np.testing.assert_array_equal(np.asarray(got["x"][:, 2]),
+                                  np.asarray(batches[0]["x"][:, 2]))
+    np.testing.assert_array_equal(np.asarray(got["x"][:, 3]),
+                                  np.asarray(batches[2]["x"][:, 3]))
+    # single-round cohorts take the fast path: the round's batches verbatim
+    same = tr._gather_batches(bf, {0: (1, 1.0, 0), 1: (1, 1.0, 0)})
+    assert same is batches[1]
+
+
+def test_tabulate_batches_clamps_past_the_end():
+    bf = tabulate_batches(iter([1, 2, 3]), 3)
+    assert [bf(r) for r in (0, 1, 2, 7)] == [1, 2, 3, 3]
+
+
+def test_async_trainer_validates_operands():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="straggler"):
+        AsyncTrainer(_ls_model(), cfg,
+                     straggler=StragglerModel.zero(N + 1))
+    tr = AsyncTrainer(_ls_model(), cfg, straggler=StragglerModel.zero(N))
+    assert tr.plan.kind == "dense"  # any topology densifies up front
+    with pytest.raises(TypeError, match="batch_fn"):
+        tr.run(tr.init_state(jax.random.PRNGKey(0)),
+               iter(_round_batches(2)), 2)
+
+
+def test_async_history_matches_trainer_cadence():
+    rounds = 7
+    cfg = _cfg(log_every=3)
+    batches = _round_batches(rounds)
+    tr = AsyncTrainer(_ls_model(), cfg, straggler=StragglerModel.zero(N),
+                      telemetry=True)
+    _state, history = tr.run(tr.init_state(jax.random.PRNGKey(0)),
+                             tabulate_batches(iter(batches), rounds), rounds)
+    assert [h["round"] for h in history] == [3, 6, 7]
+    for rec in history:
+        assert np.isfinite(rec["loss"])
+        assert rec["cohort_size"] == N
+        assert "staleness" in rec and rec["staleness"] == 0.0
+
+
+def test_cohort_mask_changes_do_not_retrace():
+    """The staleness-weight mask is a traced operand: rounds with different
+    cohorts (and a downweight policy's fractional weights) reuse ONE
+    compiled round program."""
+    traces = []
+    model = _ls_model()
+
+    def counting_loss(params, batch):
+        traces.append(1)
+        return model.loss(params, batch)
+
+    counting = model._replace(loss=counting_loss)
+    sm = StragglerModel.exponential(1.0, N, seed=3).with_faults(p_dup=0.2)
+    cfg = _cfg()
+    rounds = 6
+    tr = AsyncTrainer(counting, cfg, straggler=sm,
+                      async_cfg=AsyncConfig(tau=2, mode="downweight"))
+    tr.run(tr.init_state(jax.random.PRNGKey(0)),
+           tabulate_batches(iter(_round_batches(rounds)), rounds), rounds)
+    cohorts = {tuple(sorted(c)) for c in replay_cohorts(tr.events)}
+    assert len(cohorts) > 1, "test needs rounds with different cohorts"
+    assert sum(traces) == T0  # one trace of the round program, T0 steps
+
+
+# ---------------------------------------------------------------------------
+# Threaded mode: slow-marked, explicit deadlines (Tier-1 never polls)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_threaded_mode_keeps_invariants_with_dead_client():
+    rounds = 5
+    sm = StragglerModel.deterministic([0.2] * N, dead=(2,))
+    cfg = _cfg()
+    tr = AsyncTrainer(_ls_model(), cfg, straggler=sm,
+                      async_cfg=AsyncConfig(tau=3))
+    state, events = tr.run_threaded(
+        tr.init_state(jax.random.PRNGKey(0)),
+        tabulate_batches(iter(_round_batches(rounds)), rounds), rounds,
+        time_scale=0.01, deadline_s=30.0)
+    check_bounded_staleness(events, 3)
+    assert sum(1 for e in events if e["type"] == "tick") == rounds
+    assert all(e["client"] != 2 for e in events if e["type"] == "apply")
+    for leaf in jax.tree_util.tree_leaves(state):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+@pytest.mark.slow
+def test_threaded_mode_deadline_raises_instead_of_hanging():
+    # one live-but-glacial client: nothing arrives before the deadline
+    sm = StragglerModel.deterministic([10_000.0] * N)
+    cfg = _cfg()
+    tr = AsyncTrainer(_ls_model(), cfg, straggler=sm)
+    with pytest.raises(RuntimeError, match="deadline"):
+        tr.run_threaded(tr.init_state(jax.random.PRNGKey(0)),
+                        tabulate_batches(iter(_round_batches(2)), 2), 2,
+                        time_scale=0.01, deadline_s=1.0)
+    # all clients dead raises up front, before any window
+    smd = StragglerModel.zero(N, dead=tuple(range(N)))
+    trd = AsyncTrainer(_ls_model(), cfg, straggler=smd)
+    with pytest.raises(RuntimeError, match="dead"):
+        trd.run_threaded(trd.init_state(jax.random.PRNGKey(0)),
+                         tabulate_batches(iter(_round_batches(2)), 2), 2,
+                         deadline_s=5.0)
